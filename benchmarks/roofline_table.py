@@ -1,0 +1,52 @@
+"""Roofline tables from dry-run JSON (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Reads out/dryrun_single.json (+ optional multi/variant files) and renders
+the 40-cell baseline table with the three roofline terms, dominant
+bottleneck, useful-FLOP ratio and an MFU bound.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+COLUMNS = ["arch", "shape", "mesh", "status", "dom", "compute_s",
+           "memory_s", "collective_s", "useful", "mfu_bound", "params_B"]
+
+
+def load(path: str) -> List[Dict]:
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def rows_from(recs: List[Dict]) -> List[Dict]:
+    rows = []
+    for r in recs:
+        row = {"arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+               "status": r["status"]}
+        if r["status"] == "ok":
+            rf = r["roofline"]
+            row.update(
+                dom=rf["dominant"],
+                compute_s=round(rf["compute_s"], 3),
+                memory_s=round(rf["memory_s"], 3),
+                collective_s=round(rf["collective_s"], 3),
+                useful=round(rf["useful_flop_ratio"], 3),
+                mfu_bound=round(rf["mfu_bound"], 4),
+                params_B=round(r["params_total"] / 1e9, 1),
+            )
+        elif r["status"] == "skipped":
+            row["dom"] = "(skip: sub-quadratic attention required)"
+        else:
+            row["dom"] = r.get("error", "")[:60]
+        rows.append(row)
+    return rows
+
+
+def run(paths=("out/dryrun_single.json", "out/dryrun_multi.json")):
+    out = []
+    for p in paths:
+        out.extend(rows_from(load(p)))
+    return out

@@ -1,0 +1,90 @@
+"""Benchmark driver: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast] [--only ycsb,...]
+
+Writes CSVs under out/bench/ and prints each table.
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import os
+import sys
+import time
+
+from . import (contention, factor_analysis, feature_size,
+               hardware_counters, memory, roofline_table, scan, ycsb)
+from .common import fmt_table
+
+SUITES = {
+    "ycsb": ("Fig.11/17 — YCSB core workloads",
+             lambda fast: ycsb.run(n_keys=8_000 if fast else 20_000,
+                                   n_ops=8_192 if fast else 40_960),
+             ycsb.COLUMNS),
+    "factor": ("Fig.12a — structural factor analysis",
+               lambda fast: factor_analysis.run(
+                   n_keys=8_000 if fast else 20_000,
+                   n_ops=8_192 if fast else 16_384),
+               factor_analysis.COLUMNS),
+    "memory": ("Fig.12b — index memory consumption",
+               lambda fast: memory.run(n_keys=8_000 if fast else 20_000),
+               memory.COLUMNS),
+    "feature_size": ("Fig.13 — feature-size sweep",
+                     lambda fast: feature_size.run(
+                         n_keys=8_000 if fast else 20_000,
+                         n_ops=4_096 if fast else 16_384,
+                         fss=(1, 2, 4) if fast else (1, 2, 4, 8, 12)),
+                     feature_size.COLUMNS),
+    "contention": ("Fig.14/15 — update scalability under contention",
+                   lambda fast: contention.run_batched(
+                       n_keys=8_000 if fast else 20_000,
+                       n_ops=8_192 if fast else 32_768),
+                   contention.COLUMNS_BATCHED),
+    "contention_protocol": ("Fig.14 (protocol view) — retries vs threads",
+                            lambda fast: contention.run_protocol(),
+                            contention.COLUMNS_PROTOCOL),
+    "hardware": ("Fig.1/16 — hardware-event analogue counters",
+                 lambda fast: hardware_counters.run(
+                     n_keys=10_000 if fast else 50_000),
+                 hardware_counters.COLUMNS),
+    "scan": ("Fig.17(E) — range scan",
+             lambda fast: scan.run(n_keys=8_000 if fast else 20_000),
+             scan.COLUMNS),
+    "roofline": ("§Roofline — dry-run derived table",
+                 lambda fast: roofline_table.run(),
+                 roofline_table.COLUMNS),
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--out", default="out/bench")
+    args = ap.parse_args(argv)
+    names = args.only.split(",") if args.only else list(SUITES)
+    os.makedirs(args.out, exist_ok=True)
+    for name in names:
+        title, fn, cols = SUITES[name]
+        t0 = time.time()
+        try:
+            rows = fn(args.fast)
+        except Exception as e:  # keep the suite running
+            print(f"\n== {name}: FAILED — {type(e).__name__}: {e}",
+                  flush=True)
+            import traceback
+            traceback.print_exc()
+            continue
+        dt = time.time() - t0
+        print(f"\n== {title}  [{name}, {dt:.1f}s]")
+        print(fmt_table(rows, cols))
+        with open(os.path.join(args.out, f"{name}.csv"), "w",
+                  newline="") as f:
+            w = csv.DictWriter(f, fieldnames=cols, extrasaction="ignore")
+            w.writeheader()
+            w.writerows(rows)
+    print("\nCSV written to", args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""End-to-end serving driver (the paper-kind e2e example): batched requests
+with skewed shared prefixes through the Engine + FB+-tree prefix cache.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "yi-9b", "--requests", "24",
+                "--prompt-len", "96", "--shared-prefix", "64",
+                "--max-new", "12", "--max-batch", "4"] + sys.argv[1:]
+    main()

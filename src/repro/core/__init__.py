@@ -1,0 +1,15 @@
+"""FB+-tree core: the paper's data structure + batched latch-free ops in JAX."""
+from .fbtree import FBTree, TreeConfig, bulk_build
+from .keys import KeySet, make_keyset, encode_uint64, encode_int64
+from .branch import traverse, branch_level, BranchStats
+from .leaf import probe
+from .batch_ops import (lookup_batch, update_batch, insert_batch, remove_batch,
+                        range_scan, OpReport)
+from .baseline import lookup_variant, VARIANTS
+
+__all__ = [
+    "FBTree", "TreeConfig", "bulk_build", "KeySet", "make_keyset",
+    "encode_uint64", "encode_int64", "traverse", "branch_level", "BranchStats",
+    "probe", "lookup_batch", "update_batch", "insert_batch", "remove_batch",
+    "range_scan", "OpReport", "lookup_variant", "VARIANTS",
+]

@@ -1,0 +1,661 @@
+"""Bulk-synchronous batched tree operations with latch-free-update semantics.
+
+The paper's latch-free update (§4.4) shrinks the critical section to a single
+CAS install; reads and unrelated updates never block. The TPU-native analogue
+(DESIGN.md §2): operations are batched, everything except the final install
+(traversal, hashtag probing, validation) runs data-parallel, and the only
+serialized step is one scatter whose conflicts are resolved by a
+*deterministic reduction* — last-writer-wins by per-op sequence number,
+mirroring "updates only contend on the same key-value pairs".
+
+Inserts use the link-technique-equivalent bulk split: overflowing leaves are
+repacked into sorted chunks; the first chunk stays at the original node id so
+parent child pointers stay valid (exactly the paper's "transfer the greater
+half into the new node n'"), new anchors propagate bottom-up, and versions are
+bumped for insert/remove but *not* for update (§4.2, Fig. 7).
+
+Every tree array carries one trailing scratch row (index ``shape[0]-1``) that
+masked scatters dump into; watermarks never allocate it.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .branch import BranchStats, branch_level, to_sibling
+from .fbtree import EMPTY, FBTree, Level, TreeArrays
+from .keys import compare_padded, fnv1a_tags, pack_words_j
+from .leaf import probe
+
+__all__ = [
+    "OpReport", "lookup_batch", "update_batch", "insert_batch",
+    "remove_batch", "range_scan", "dedupe_last_wins", "traverse_path",
+]
+
+BIG = jnp.int32(2**30)
+
+
+class OpReport(NamedTuple):
+    found: jnp.ndarray          # bool [B]
+    conflicts: jnp.ndarray      # int32 scalar — ops superseded inside batch
+    splits: jnp.ndarray         # int32 scalar — leaves split
+    error: jnp.ndarray          # bool scalar — capacity violated
+    feat_rounds: jnp.ndarray    # int32 [B]
+    suffix_bs: jnp.ndarray      # int32 [B]
+    key_compares: jnp.ndarray   # int32 [B]
+    lines_touched: jnp.ndarray  # int32 [B]
+    tag_candidates: jnp.ndarray  # int32 [B]
+
+
+def _report(found, bstats: BranchStats, lstats=None, conflicts=0, splits=0,
+            error=False):
+    b = found.shape[0]
+    z = jnp.zeros((b,), jnp.int32)
+    return OpReport(
+        found=found,
+        conflicts=jnp.asarray(conflicts, jnp.int32),
+        splits=jnp.asarray(splits, jnp.int32),
+        error=jnp.asarray(error, bool),
+        feat_rounds=bstats.feat_rounds,
+        suffix_bs=bstats.suffix_bs,
+        key_compares=bstats.key_compares,
+        lines_touched=bstats.lines_touched + (lstats.lines_touched if lstats else z),
+        tag_candidates=(lstats.tag_candidates if lstats else z),
+    )
+
+
+def traverse_path(tree: FBTree, qb, ql, sibling_check: bool = True):
+    """Root-to-leaf traversal recording the node id at every level."""
+    a = tree.arrays
+    B = qb.shape[0]
+    node_ids = jnp.zeros((B,), jnp.int32)
+    stats = BranchStats.zeros(B)
+    path = []
+    for level in a.levels:
+        path.append(node_ids)
+        node_ids, s = branch_level(level, a.key_bytes, a.key_lens, node_ids, qb, ql)
+        stats = stats + s
+    if sibling_check:
+        node_ids, hops = to_sibling(tree, node_ids, qb, ql)
+        stats = stats._replace(sibling_hops=stats.sibling_hops + hops)
+    return node_ids, path, stats
+
+
+def dedupe_last_wins(qb, ql, seq) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Deterministic in-batch conflict resolution: highest seq per key wins."""
+    words = pack_words_j(qb)                      # [B, W]
+    B, W = words.shape
+    perm = jnp.argsort(seq, stable=True)
+
+    def resort(col, perm):
+        return jnp.take(perm, jnp.argsort(jnp.take(col, perm), stable=True))
+
+    perm = resort(ql, perm)                       # length = least significant
+    for col in range(W - 1, -1, -1):
+        perm = resort(words[:, col], perm)
+    sb = jnp.take(words, perm, axis=0)
+    sl = jnp.take(ql, perm)
+    same_next = jnp.concatenate([
+        (sb[1:] == sb[:-1]).all(-1) & (sl[1:] == sl[:-1]),
+        jnp.zeros((1,), bool)])
+    keep_sorted = ~same_next                      # last of each equal-run wins
+    winners = jnp.zeros((B,), bool).at[perm].set(keep_sorted)
+    return winners, (B - keep_sorted.sum()).astype(jnp.int32)
+
+
+def rowwise_lex_argsort(kb, kl, valid):
+    """argsort rows of kb [R,T,L] by (valid desc, key bytes asc, len asc)."""
+    R, T, L = kb.shape
+    words = pack_words_j(kb)                      # [R, T, W]
+    W = words.shape[-1]
+    perm = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (R, T))
+
+    def resort(col_vals, perm):
+        v = jnp.take_along_axis(col_vals, perm, axis=-1)
+        idx = jnp.argsort(v, axis=-1, stable=True)
+        return jnp.take_along_axis(perm, idx, axis=-1)
+
+    perm = resort(kl, perm)
+    for col in range(W - 1, -1, -1):
+        perm = resort(words[..., col], perm)
+    perm = resort((~valid).astype(jnp.int32), perm)  # invalid → end
+    return perm
+
+
+def _seg_head_rank(sorted_ids: jnp.ndarray):
+    """(is_head, rank-within-run) for a sorted id array."""
+    n = sorted_ids.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    is_head = jnp.concatenate([jnp.ones((1,), bool),
+                               sorted_ids[1:] != sorted_ids[:-1]])
+    head_pos = jnp.where(is_head, idx, 0)
+    head_pos = jax.lax.associative_scan(jnp.maximum, head_pos)
+    return is_head, idx - head_pos
+
+
+def _chunk_of_pos(p, base, rem):
+    cut = (base + 1) * rem
+    return jnp.where(p < cut, p // jnp.maximum(base + 1, 1),
+                     rem + (p - cut) // jnp.maximum(base, 1)).astype(jnp.int32)
+
+
+def _chunk_start(c, base, rem):
+    return jnp.where(c <= rem, c * (base + 1),
+                     rem * (base + 1) + (c - rem) * base).astype(jnp.int32)
+
+
+def _recompute_inner_meta(kb_store, kl_store, anchors, knum, fs):
+    """plen/prefix/features for rewritten inner nodes. anchors [R, ns]."""
+    R, ns = anchors.shape
+    L = kb_store.shape[-1]
+    aid = jnp.maximum(anchors, 0)
+    akb = kb_store[aid]                       # [R, ns, L]
+    akl = kl_store[aid]
+    lane = jnp.arange(ns, dtype=jnp.int32)[None, :]
+    valid = lane < knum[:, None]
+    first = akb[:, :1, :]
+    same = (akb == first) | ~valid[:, :, None]
+    allsame = same.all(axis=1)                # [R, L]
+    plen = jnp.where(allsame.all(-1), L,
+                     jnp.argmin(allsame.astype(jnp.int32), axis=-1))
+    minlen = jnp.min(jnp.where(valid, akl, BIG), axis=-1)
+    plen = jnp.minimum(plen, jnp.minimum(minlen, L)).astype(jnp.int32)
+    prefix = akb[:, 0, :]
+    feats = []
+    for f in range(fs):
+        pos = jnp.clip(plen + f, 0, L - 1)        # [R]
+        byte = jnp.take_along_axis(
+            akb, jnp.broadcast_to(pos[:, None, None], (R, ns, 1)), axis=-1)[..., 0]
+        byte = jnp.where(((plen + f)[:, None] < L) & valid, byte, 0)
+        feats.append(byte.astype(jnp.uint8))
+    features = jnp.stack(feats, axis=1)       # [R, fs, ns]
+    return plen, prefix, features
+
+
+# --------------------------------------------------------------------------
+# lookup / update / remove
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("sibling_check",))
+def lookup_batch(tree: FBTree, qb, ql, sibling_check: bool = True):
+    """Batched point lookup. Returns (vals [B], report)."""
+    leaf_ids, _, bstats = traverse_path(tree, qb, ql, sibling_check)
+    found, slot, val, lstats = probe(tree, leaf_ids, qb, ql)
+    return val, _report(found, bstats, lstats)
+
+
+@jax.jit
+def update_batch(tree: FBTree, qb, ql, vals):
+    """Blind value update for existing keys (latch-free CAS analogue).
+
+    Does NOT bump leaf versions (§4.2 — readers never restart on updates).
+    """
+    B = qb.shape[0]
+    a = tree.arrays
+    dump = a.leaf_occ.shape[0] - 1
+    winners, conflicts = dedupe_last_wins(qb, ql, jnp.arange(B, dtype=jnp.int32))
+    leaf_ids, _, bstats = traverse_path(tree, qb, ql)
+    found, slot, _, lstats = probe(tree, leaf_ids, qb, ql)
+    do = winners & found
+    li = jnp.where(do, leaf_ids, dump)
+    lv = a.leaf_val.at[li, slot].set(
+        jnp.where(do, vals.astype(a.leaf_val.dtype), a.leaf_val[li, slot]))
+    return tree.replace(leaf_val=lv), _report(found, bstats, lstats,
+                                              conflicts=conflicts)
+
+
+@jax.jit
+def remove_batch(tree: FBTree, qb, ql):
+    """Tombstone removal (slot cleared, version bumped)."""
+    B = qb.shape[0]
+    a = tree.arrays
+    dump = a.leaf_occ.shape[0] - 1
+    winners, conflicts = dedupe_last_wins(qb, ql, jnp.arange(B, dtype=jnp.int32))
+    leaf_ids, _, bstats = traverse_path(tree, qb, ql)
+    found, slot, _, lstats = probe(tree, leaf_ids, qb, ql)
+    do = winners & found
+    li = jnp.where(do, leaf_ids, dump)
+    occ = a.leaf_occ.at[li, slot].set(jnp.where(do, False, a.leaf_occ[li, slot]))
+    kid = a.leaf_keyid.at[li, slot].set(
+        jnp.where(do, EMPTY, a.leaf_keyid[li, slot]))
+    ver = a.leaf_version.at[li].add(do.astype(jnp.int32))
+    return (tree.replace(leaf_occ=occ, leaf_keyid=kid, leaf_version=ver),
+            _report(found, bstats, lstats, conflicts=conflicts))
+
+
+# --------------------------------------------------------------------------
+# insert (upsert)
+# --------------------------------------------------------------------------
+
+@jax.jit
+def _prepare_insert(tree: FBTree, qb, ql, vals):
+    """Dedupe, update existing keys in place, append new key bytes to pool."""
+    B = qb.shape[0]
+    a = tree.arrays
+    ldump = a.leaf_occ.shape[0] - 1
+    kdump = a.key_bytes.shape[0] - 1
+    winners, conflicts = dedupe_last_wins(qb, ql, jnp.arange(B, dtype=jnp.int32))
+    leaf_ids, _, bstats = traverse_path(tree, qb, ql)
+    found, slot, _, lstats = probe(tree, leaf_ids, qb, ql)
+
+    upd = winners & found
+    li = jnp.where(upd, leaf_ids, ldump)
+    lv = a.leaf_val.at[li, slot].set(
+        jnp.where(upd, vals.astype(a.leaf_val.dtype), a.leaf_val[li, slot]))
+
+    is_new = winners & ~found
+    offs = jnp.cumsum(is_new.astype(jnp.int32)) - 1
+    kid_op = jnp.where(is_new, a.key_count + offs, EMPTY)
+    n_new = is_new.sum().astype(jnp.int32)
+    err = (a.key_count + n_new) > kdump
+    dst = jnp.where(is_new & (kid_op < kdump), kid_op, kdump)
+    kb_new = a.key_bytes.at[dst].set(jnp.where(is_new[:, None], qb, a.key_bytes[dst]))
+    kl_new = a.key_lens.at[dst].set(jnp.where(is_new, ql, a.key_lens[dst]))
+    kt_new = a.key_tags.at[dst].set(
+        jnp.where(is_new, fnv1a_tags(qb, ql), a.key_tags[dst]))
+
+    tree2 = tree.replace(leaf_val=lv, key_bytes=kb_new, key_lens=kl_new,
+                         key_tags=kt_new, key_count=a.key_count + n_new)
+    return tree2, kid_op, is_new, _report(found, bstats, lstats,
+                                          conflicts=conflicts, error=err)
+
+
+def _make_insert_round(cfg, max_ov: int, ins_cap: int):
+    """Build the jitted per-round insert function (static shapes)."""
+    ns, fs, L = cfg.ns, cfg.fs, cfg.key_width
+    lfill = cfg.leaf_fill
+    ifill = cfg.inner_fill
+    C_MAX = -(-(ns + ins_cap) // lfill) + 1
+    # worst-case anchors arriving at one parent: every one of its <= ns ov
+    # children contributes C_MAX-1 new chunks (one extra level of slack; the
+    # error flag + raise in insert_batch is the backstop for pathologies)
+    IN_CAP = min(max_ov, ns) * (C_MAX - 1) + ns
+
+    def _repack_rows(kb_store, kl_store, item_a, item_b, item_valid, row_valid,
+                     fill, c_max):
+        """Sort row workspaces and chunk them. Returns dict of chunking state."""
+        akb = kb_store[jnp.maximum(item_a, 0)]
+        akl = jnp.where(item_valid, kl_store[jnp.maximum(item_a, 0)], 0)
+        sperm = rowwise_lex_argsort(akb, akl, item_valid)
+        g = lambda x: jnp.take_along_axis(x, sperm, axis=-1)
+        item_a, item_b, item_valid = g(item_a), g(item_b), g(item_valid)
+        T = item_a.shape[1]
+        Tcnt = item_valid.sum(-1).astype(jnp.int32)
+        n_chunks = jnp.where(row_valid, -(-Tcnt // fill), 0).astype(jnp.int32)
+        base = Tcnt // jnp.maximum(n_chunks, 1)
+        rem = Tcnt - base * jnp.maximum(n_chunks, 1)
+        pos = jnp.arange(T, dtype=jnp.int32)[None, :]
+        chunk = _chunk_of_pos(pos, base[:, None], rem[:, None])
+        chunk = jnp.where(item_valid, jnp.minimum(chunk, c_max - 1), c_max - 1)
+        slot_in_chunk = pos - _chunk_start(chunk, base[:, None], rem[:, None])
+        cidx = jnp.arange(c_max, dtype=jnp.int32)[None, :]
+        cstart = _chunk_start(cidx, base[:, None], rem[:, None])
+        chunk_exists = (cidx < n_chunks[:, None]) & row_valid[:, None]
+        csize = (base[:, None] + (cidx < rem[:, None])).astype(jnp.int32)
+        cmin = jnp.take_along_axis(item_a, jnp.minimum(cstart, T - 1), axis=-1)
+        return dict(a=item_a, b=item_b, valid=item_valid, Tcnt=Tcnt,
+                    n_chunks=n_chunks, chunk=chunk, slot=slot_in_chunk,
+                    cidx=cidx, chunk_exists=chunk_exists, csize=csize, cmin=cmin)
+
+    def round_fn(tree: FBTree, kid_op, pending, vals):
+        a = tree.arrays
+        B = kid_op.shape[0]
+        LC = a.leaf_occ.shape[0]
+        ldump = LC - 1
+        qb = a.key_bytes[jnp.maximum(kid_op, 0)]
+        ql = jnp.where(pending, a.key_lens[jnp.maximum(kid_op, 0)], 0)
+        leaf_ids, path, _ = traverse_path(tree, qb, ql, sibling_check=False)
+        leaf_ids = jnp.where(pending, leaf_ids, ldump)
+
+        perm = jnp.argsort(jnp.where(pending, leaf_ids, BIG), stable=True)
+        s_leaf = jnp.take(leaf_ids, perm)
+        s_pending = jnp.take(pending, perm)
+        s_kid = jnp.take(kid_op, perm)
+        s_val = jnp.take(vals, perm)
+        is_head, rank = _seg_head_rank(s_leaf)
+
+        cnt_leaf = jnp.zeros((LC,), jnp.int32).at[
+            jnp.where(s_pending, s_leaf, ldump)].add(s_pending.astype(jnp.int32))
+        occ_cnt = a.leaf_occ.sum(-1).astype(jnp.int32)
+        fits_leaf = (occ_cnt + cnt_leaf) <= ns
+
+        # ---------- fit path ----------
+        s_fit = s_pending & fits_leaf[s_leaf]
+        occ_rows = a.leaf_occ[s_leaf]
+        free_order = jnp.argsort(occ_rows.astype(jnp.int32), axis=-1, stable=True)
+        slot = jnp.take_along_axis(free_order, jnp.minimum(rank, ns - 1)[:, None],
+                                   axis=-1)[:, 0]
+        li = jnp.where(s_fit, s_leaf, ldump)
+        sel = lambda new, old: jnp.where(s_fit, new, old)
+        leaf_keyid = a.leaf_keyid.at[li, slot].set(sel(s_kid, a.leaf_keyid[li, slot]))
+        leaf_val = a.leaf_val.at[li, slot].set(
+            sel(s_val.astype(a.leaf_val.dtype), a.leaf_val[li, slot]))
+        leaf_tags = a.leaf_tags.at[li, slot].set(
+            sel(a.key_tags[jnp.maximum(s_kid, 0)], a.leaf_tags[li, slot]))
+        leaf_occ = a.leaf_occ.at[li, slot].set(sel(True, a.leaf_occ[li, slot]))
+        leaf_version = a.leaf_version.at[li].add(s_fit.astype(jnp.int32))
+        leaf_ordered = a.leaf_ordered.at[li].set(
+            jnp.where(s_fit, False, a.leaf_ordered[li]))
+        done_sorted = s_fit
+
+        # ---------- overflow path ----------
+        ov_head = is_head & s_pending & ~fits_leaf[s_leaf]
+        ov_head_pos = jnp.argsort(
+            jnp.where(ov_head, jnp.arange(B, dtype=jnp.int32), BIG),
+            stable=True)[:max_ov]
+        ov_valid = jnp.take(ov_head, ov_head_pos)
+        ov_leaf = jnp.where(ov_valid, jnp.take(s_leaf, ov_head_pos), EMPTY)
+        ov_repop = jnp.where(ov_valid, jnp.take(perm, ov_head_pos), 0)
+
+        ov_rank_of_leaf = jnp.full((LC,), BIG).at[
+            jnp.where(ov_valid, ov_leaf, ldump)].set(
+            jnp.where(ov_valid, jnp.arange(max_ov, dtype=jnp.int32), BIG))
+        op_ovr = ov_rank_of_leaf[s_leaf]
+        s_proc = s_pending & ~fits_leaf[s_leaf] & (op_ovr < max_ov) & (rank < ins_cap)
+        done_sorted = done_sorted | s_proc
+
+        ovl = jnp.where(ov_valid, ov_leaf, ldump)
+        ws_kid = jnp.concatenate(
+            [a.leaf_keyid[ovl], jnp.full((max_ov, ins_cap), EMPTY, jnp.int32)], axis=1)
+        ws_val = jnp.concatenate(
+            [a.leaf_val[ovl], jnp.zeros((max_ov, ins_cap), a.leaf_val.dtype)], axis=1)
+        ws_valid = jnp.concatenate(
+            [a.leaf_occ[ovl] & ov_valid[:, None],
+             jnp.zeros((max_ov, ins_cap), bool)], axis=1)
+        ri = jnp.where(s_proc, op_ovr, max_ov - 1)
+        ci = jnp.where(s_proc, ns + jnp.minimum(rank, ins_cap - 1), 0)
+        selp = lambda new, old: jnp.where(s_proc, new, old)
+        ws_kid = ws_kid.at[ri, ci].set(selp(s_kid, ws_kid[ri, ci]))
+        ws_val = ws_val.at[ri, ci].set(
+            selp(s_val.astype(a.leaf_val.dtype), ws_val[ri, ci]))
+        ws_valid = ws_valid.at[ri, ci].set(selp(True, ws_valid[ri, ci]))
+
+        rp = _repack_rows(a.key_bytes, a.key_lens, ws_kid, ws_val, ws_valid,
+                          ov_valid, lfill, C_MAX)
+
+        new_per_row = jnp.maximum(rp["n_chunks"] - 1, 0)
+        new_base = a.leaf_count + jnp.cumsum(new_per_row) - new_per_row
+        err = (a.leaf_count + new_per_row.sum()) > ldump
+
+        dst_leaf = jnp.where(rp["chunk"] == 0, ovl[:, None],
+                             new_base[:, None] + rp["chunk"] - 1)
+        dst_leaf = jnp.where(rp["valid"] & (rp["chunk"] < rp["n_chunks"][:, None]),
+                             dst_leaf, ldump)
+
+        clr = ovl
+        leaf_occ = leaf_occ.at[clr].set(
+            jnp.where(ov_valid[:, None], False, leaf_occ[clr]))
+        leaf_keyid = leaf_keyid.at[clr].set(
+            jnp.where(ov_valid[:, None], EMPTY, leaf_keyid[clr]))
+
+        fvalid = rp["valid"].reshape(-1)
+        fl = jnp.where(fvalid, dst_leaf.reshape(-1), ldump)
+        fsl = jnp.where(fvalid, jnp.clip(rp["slot"], 0, ns - 1).reshape(-1), ns - 1)
+        fkid = rp["a"].reshape(-1)
+        w = lambda arr, val: arr.at[fl, fsl].set(jnp.where(fvalid, val, arr[fl, fsl]))
+        leaf_keyid = w(leaf_keyid, fkid)
+        leaf_val = w(leaf_val, rp["b"].reshape(-1))
+        leaf_tags = w(leaf_tags, a.key_tags[jnp.maximum(fkid, 0)])
+        leaf_occ = w(leaf_occ, jnp.ones_like(fvalid))
+
+        cidx, chunk_exists, cmin = rp["cidx"], rp["chunk_exists"], rp["cmin"]
+        chunk_leaf = jnp.where(cidx == 0, ovl[:, None], new_base[:, None] + cidx - 1)
+        next_chunk_leaf = jnp.where(cidx + 1 < rp["n_chunks"][:, None],
+                                    new_base[:, None] + cidx,
+                                    a.leaf_next[ovl][:, None])
+        chunk_high = jnp.where(
+            cidx + 1 < rp["n_chunks"][:, None],
+            jnp.take_along_axis(cmin, jnp.minimum(cidx + 1, C_MAX - 1), axis=-1),
+            a.leaf_high[ovl][:, None])
+        wmask = chunk_exists.reshape(-1)
+        wl = jnp.where(wmask, chunk_leaf.reshape(-1), ldump)
+        leaf_next = a.leaf_next.at[wl].set(
+            jnp.where(wmask, next_chunk_leaf.reshape(-1), a.leaf_next[wl]))
+        leaf_high = a.leaf_high.at[wl].set(
+            jnp.where(wmask, chunk_high.reshape(-1), a.leaf_high[wl]))
+        leaf_version = leaf_version.at[wl].add(wmask.astype(jnp.int32))
+        leaf_ordered = leaf_ordered.at[wl].set(
+            jnp.where(wmask, True, leaf_ordered[wl]))
+        leaf_count = a.leaf_count + new_per_row.sum().astype(jnp.int32)
+        n_splits = ov_valid.sum().astype(jnp.int32)
+
+        arrays = a._replace(
+            leaf_keyid=leaf_keyid, leaf_val=leaf_val, leaf_tags=leaf_tags,
+            leaf_occ=leaf_occ, leaf_high=leaf_high, leaf_next=leaf_next,
+            leaf_version=leaf_version, leaf_ordered=leaf_ordered,
+            leaf_count=leaf_count)
+
+        # tuples for the parent level: (parent node, anchor kid, child, rep-op)
+        tup_mask = (chunk_exists & (cidx >= 1)).reshape(-1)
+        tup_repop = jnp.broadcast_to(ov_repop[:, None], (max_ov, C_MAX)).reshape(-1)
+        tup_parent = jnp.where(tup_mask, jnp.take(path[-1], tup_repop), EMPTY)
+        tup_anchor = jnp.where(tup_mask, cmin.reshape(-1), EMPTY)
+        tup_child = jnp.where(tup_mask, chunk_leaf.reshape(-1), EMPTY)
+
+        new_levels = list(arrays.levels)
+        for lvl in range(len(arrays.levels) - 1, -1, -1):
+            parent_path = path[lvl - 1] if lvl > 0 else None
+            (lvl2, tup_parent, tup_anchor, tup_child, tup_repop, e) = _inner_insert(
+                new_levels[lvl], arrays, tup_parent, tup_anchor, tup_child,
+                tup_repop, parent_path)
+            new_levels[lvl] = lvl2
+            err = err | e
+        arrays = arrays._replace(levels=tuple(new_levels))
+
+        done_orig = jnp.zeros((B,), bool).at[perm].set(done_sorted)
+        new_pending = pending & ~done_orig
+        return FBTree(tree.config, arrays), new_pending, n_splits, err
+
+    def _inner_insert(level: Level, arrays: TreeArrays,
+                      tup_parent, tup_anchor, tup_child, tup_repop, parent_path):
+        """Insert (anchor, child) tuples into one inner level; emit next tuples."""
+        NT = tup_parent.shape[0]
+        capn = level.knum.shape[0]
+        ndump = capn - 1
+        kb_store, kl_store = arrays.key_bytes, arrays.key_lens
+        is_root = parent_path is None
+
+        tv = tup_parent >= 0
+        perm = jnp.argsort(jnp.where(tv, tup_parent, BIG), stable=True)
+        sp = jnp.take(tup_parent, perm)
+        sa = jnp.take(tup_anchor, perm)
+        sc = jnp.take(tup_child, perm)
+        sr = jnp.take(tup_repop, perm)
+        stv = jnp.take(tv, perm)
+        is_head, rank = _seg_head_rank(sp)
+
+        R = max_ov
+        head_pos = jnp.argsort(jnp.where(is_head & stv,
+                                         jnp.arange(NT, dtype=jnp.int32), BIG),
+                               stable=True)[:R]
+        row_valid = jnp.take(is_head & stv, head_pos)
+        row_node = jnp.where(row_valid, jnp.take(sp, head_pos), EMPTY)
+        row_repop = jnp.where(row_valid, jnp.take(sr, head_pos), 0)
+        rank_of_node = jnp.full((capn,), BIG).at[
+            jnp.where(row_valid, row_node, ndump)].set(
+            jnp.where(row_valid, jnp.arange(R, dtype=jnp.int32), BIG))
+        op_row = rank_of_node[jnp.maximum(sp, 0)]
+        s_ok = stv & (op_row < R) & (rank < IN_CAP)
+        err = (stv & ~s_ok).any()
+
+        rn = jnp.where(row_valid, row_node, ndump)
+        lane = jnp.arange(ns, dtype=jnp.int32)[None, :]
+        ws_anchor = jnp.concatenate(
+            [level.anchors[rn], jnp.full((R, IN_CAP), EMPTY, jnp.int32)], axis=1)
+        ws_child = jnp.concatenate(
+            [level.children[rn], jnp.full((R, IN_CAP), EMPTY, jnp.int32)], axis=1)
+        ws_valid = jnp.concatenate(
+            [(lane < level.knum[rn][:, None]) & row_valid[:, None],
+             jnp.zeros((R, IN_CAP), bool)], axis=1)
+        ri = jnp.where(s_ok, op_row, R - 1)
+        ci = jnp.where(s_ok, ns + jnp.minimum(rank, IN_CAP - 1), 0)
+        selp = lambda new, old: jnp.where(s_ok, new, old)
+        ws_anchor = ws_anchor.at[ri, ci].set(selp(sa, ws_anchor[ri, ci]))
+        ws_child = ws_child.at[ri, ci].set(selp(sc, ws_child[ri, ci]))
+        ws_valid = ws_valid.at[ri, ci].set(selp(True, ws_valid[ri, ci]))
+
+        CI_MAX = -(-(ns + IN_CAP) // ifill) + 1
+        rp = _repack_rows(kb_store, kl_store, ws_anchor, ws_child, ws_valid,
+                          row_valid, ifill, CI_MAX)
+        n_chunks = rp["n_chunks"]
+        if is_root:
+            err = err | (n_chunks > 1).any() | (rp["Tcnt"] > ns).any()
+            n_chunks = jnp.minimum(n_chunks, 1)
+
+        new_per_row = jnp.maximum(n_chunks - 1, 0)
+        new_base = level.count + jnp.cumsum(new_per_row) - new_per_row
+        err = err | ((level.count + new_per_row.sum()) > ndump)
+
+        dst_node = jnp.where(rp["chunk"] == 0, rn[:, None],
+                             new_base[:, None] + rp["chunk"] - 1)
+        dst_node = jnp.where(rp["valid"] & (rp["chunk"] < n_chunks[:, None]),
+                             dst_node, ndump)
+
+        anchors_new = level.anchors.at[rn].set(
+            jnp.where(row_valid[:, None], EMPTY, level.anchors[rn]))
+        children_new = level.children.at[rn].set(
+            jnp.where(row_valid[:, None], EMPTY, level.children[rn]))
+        fvalid = (rp["valid"] & (rp["slot"] < ns) & (rp["slot"] >= 0)
+                  & (rp["chunk"] < n_chunks[:, None])).reshape(-1)
+        fn = jnp.where(fvalid, dst_node.reshape(-1), ndump)
+        fsl = jnp.where(fvalid, jnp.clip(rp["slot"], 0, ns - 1).reshape(-1), ns - 1)
+        anchors_new = anchors_new.at[fn, fsl].set(
+            jnp.where(fvalid, rp["a"].reshape(-1), anchors_new[fn, fsl]))
+        children_new = children_new.at[fn, fsl].set(
+            jnp.where(fvalid, rp["b"].reshape(-1), children_new[fn, fsl]))
+
+        cidx = rp["cidx"]
+        chunk_exists = (cidx < n_chunks[:, None]) & row_valid[:, None]
+        csize = jnp.minimum(rp["csize"], ns)
+        cnode = jnp.where(cidx == 0, rn[:, None], new_base[:, None] + cidx - 1)
+        wm = chunk_exists.reshape(-1)
+        wn = jnp.where(wm, cnode.reshape(-1), ndump)
+        knum_new = level.knum.at[wn].set(
+            jnp.where(wm, csize.reshape(-1), level.knum[wn]))
+
+        sub_anch = anchors_new[wn]
+        sub_knum = knum_new[wn]
+        pl, pf, ft = _recompute_inner_meta(kb_store, kl_store, sub_anch,
+                                           sub_knum, fs)
+        plen_new = level.plen.at[wn].set(jnp.where(wm, pl, level.plen[wn]))
+        prefix_new = level.prefix.at[wn].set(
+            jnp.where(wm[:, None], pf, level.prefix[wn]))
+        feats_new = level.features.at[wn].set(
+            jnp.where(wm[:, None, None], ft, level.features[wn]))
+        count_new = level.count + new_per_row.sum().astype(jnp.int32)
+
+        level2 = Level(knum=knum_new, plen=plen_new, prefix=prefix_new,
+                       features=feats_new, children=children_new,
+                       anchors=anchors_new, count=count_new)
+
+        nt_mask = (chunk_exists & (cidx >= 1)).reshape(-1)
+        nt_repop = jnp.broadcast_to(row_repop[:, None], (R, CI_MAX)).reshape(-1)
+        if is_root:
+            nt_parent = jnp.full((R * CI_MAX,), EMPTY, jnp.int32)
+        else:
+            nt_parent = jnp.where(nt_mask, jnp.take(parent_path, nt_repop), EMPTY)
+        nt_anchor = jnp.where(nt_mask, rp["cmin"].reshape(-1), EMPTY)
+        nt_child = jnp.where(nt_mask, cnode.reshape(-1), EMPTY)
+        return level2, nt_parent, nt_anchor, nt_child, nt_repop, err
+
+    return jax.jit(round_fn)
+
+
+_ROUND_CACHE = {}
+
+
+def insert_batch(tree: FBTree, qb, ql, vals, max_ov: int = 128,
+                 ins_cap: int = None, max_rounds: int = 64):
+    """Batched upsert. Returns (tree', report, rounds).
+
+    Orchestrates: dedupe/update/append (one jitted call) + split rounds
+    (jitted, bounded work per round) until no ops are pending. ``ins_cap``
+    bounds keys absorbed per leaf per round (default 4*ns — monotone-append
+    workloads funnel a whole batch into the rightmost leaf).
+    """
+    qb = jnp.asarray(qb)
+    ql = jnp.asarray(ql)
+    vals = jnp.asarray(vals)
+    max_ov = min(max_ov, qb.shape[0])   # can't overflow more leaves than ops
+    if ins_cap is None:
+        ins_cap = 4 * tree.config.ns
+    key = (tree.config, max_ov, ins_cap)
+    if key not in _ROUND_CACHE:
+        _ROUND_CACHE[key] = _make_insert_round(tree.config, max_ov, ins_cap)
+    round_fn = _ROUND_CACHE[key]
+
+    tree, kid_op, pending, rep = _prepare_insert(tree, qb, ql, vals)
+    if bool(rep.error):
+        raise RuntimeError("insert_batch: key pool capacity exceeded")
+    total_splits = jnp.int32(0)
+    rounds = 0
+    while rounds < max_rounds:
+        if not bool(pending.any()):
+            break
+        tree, pending, n_splits, e = round_fn(tree, kid_op, pending, vals)
+        if bool(e):
+            raise RuntimeError("insert_batch: capacity violated (leaf/node/"
+                               "root overflow) — grow TreeConfig caps")
+        total_splits = total_splits + n_splits
+        rounds += 1
+    if bool(pending.any()):
+        raise RuntimeError("insert_batch: ops still pending after "
+                           f"{max_rounds} rounds (capacity exhausted?)")
+    rep = rep._replace(splits=total_splits)
+    return tree, rep, rounds
+
+
+# --------------------------------------------------------------------------
+# range scan
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("max_items",))
+def range_scan(tree: FBTree, qb, ql, max_items: int = 64):
+    """Batched range scan: for each start key return up to ``max_items``
+    (key_id, value) pairs in ascending key order (lazy rearrangement: unsorted
+    leaves are sorted on the fly, modeling §4.5)."""
+    a = tree.arrays
+    cfg = tree.config
+    ns = cfg.ns
+    B = qb.shape[0]
+    leaf_ids, _, bstats = traverse_path(tree, qb, ql)
+    hops = -(-max_items // max(1, cfg.leaf_fill // 2)) + 1
+
+    # one scratch column at index max_items for masked scatter dumps
+    out_kid = jnp.full((B, max_items + 1), EMPTY, jnp.int32)
+    out_val = jnp.zeros((B, max_items + 1), a.leaf_val.dtype)
+    emitted = jnp.zeros((B,), jnp.int32)
+    cur = leaf_ids
+    rearranged = jnp.zeros((B,), jnp.int32)
+    bidx = jnp.broadcast_to(jnp.arange(B)[:, None], (B, ns))
+    for h in range(hops):
+        kid = a.leaf_keyid[cur]                     # [B, ns]
+        val = a.leaf_val[cur]
+        occ = a.leaf_occ[cur]
+        kb = a.key_bytes[jnp.maximum(kid, 0)]       # [B, ns, L]
+        kl = jnp.where(occ, a.key_lens[jnp.maximum(kid, 0)], 0)
+        perm = rowwise_lex_argsort(kb, kl, occ)
+        g = lambda x: jnp.take_along_axis(x, perm, axis=-1)
+        kid, val, occ = g(kid), g(val), g(occ)
+        kb = jnp.take_along_axis(kb, perm[:, :, None], axis=1)
+        kl = g(kl)
+        if h == 0:
+            cmp = compare_padded(kb, kl, qb[:, None, :], ql[:, None])
+            emit = occ & (cmp >= 0)
+            rearranged = rearranged + (~a.leaf_ordered[cur]).astype(jnp.int32)
+        else:
+            emit = occ
+        rank_emit = jnp.cumsum(emit.astype(jnp.int32), axis=-1) - 1
+        dstpos = emitted[:, None] + rank_emit
+        ok = emit & (dstpos < max_items) & (dstpos >= 0)
+        dp = jnp.where(ok, dstpos, max_items)       # dump to scratch column
+        out_kid = out_kid.at[bidx, dp].set(jnp.where(ok, kid, out_kid[bidx, dp]))
+        out_val = out_val.at[bidx, dp].set(jnp.where(ok, val, out_val[bidx, dp]))
+        emitted = jnp.minimum(emitted + emit.sum(-1), max_items)
+        nxt = a.leaf_next[cur]
+        cur = jnp.where((nxt >= 0) & (emitted < max_items), nxt,
+                        a.leaf_occ.shape[0] - 1)
+    return out_kid[:, :max_items], out_val[:, :max_items], emitted, rearranged

@@ -1,0 +1,298 @@
+"""FB+-tree core structure (structure-of-arrays, JAX pytree).
+
+Layout mirrors the paper's node structures (Fig. 5) adapted to a pointer-free
+structure-of-arrays device representation:
+
+* inner level ``l`` (level 0 = root, fixed height — upper levels may be
+  single-child chains so the compiled traversal is shape-static):
+  - ``knum``      number of anchors (== number of children)
+  - ``plen``      common-prefix length of the node's anchors
+  - ``prefix``    embedded common prefix bytes (the ``tiny``/``huge`` fields)
+  - ``features``  ``uint8[fs, ns]`` — byte ``plen+fid`` of every anchor,
+    transposed so one row is one SIMD vector (paper §3.3)
+  - ``children``  child ids (next level / leaf ids)
+  - ``anchors``   key ids (pointers to high keys — the paper stores pointers,
+    not key copies; here: indices into the key pool)
+* leaves: unsorted kv slots + occupancy bitmap + 1-byte hashtags + high key +
+  sibling link + version word (insert/remove bump it; updates do *not* — §4.2).
+
+Anchor convention: ``anchors[i]`` is the minimum key of ``children[i]``'s
+subtree; child ``i`` covers ``[anchors[i], anchors[i+1])`` and keys below
+``anchors[0]`` descend to child 0.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import keys as K
+
+__all__ = ["TreeConfig", "Level", "FBTree", "bulk_build", "tree_to_device"]
+
+EMPTY = np.int32(-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeConfig:
+    key_width: int
+    ns: int = 64           # slots / anchors per node (paper default 64)
+    fs: int = 4            # feature bytes per anchor (paper default 4)
+    leaf_fill: int = 48    # bulk-load / repack target occupancy
+    inner_fill: int = 48
+    n_levels: int = 3      # inner levels incl. root chain
+    leaf_cap: int = 1024
+    level_caps: Tuple[int, ...] = (1, 16, 256)
+    key_cap: int = 65536
+    val_dtype: Any = jnp.int32
+
+    @staticmethod
+    def plan(max_keys: int, key_width: int, ns: int = 64, fs: int = 4,
+             leaf_fill: int = 48, inner_fill: int = 48,
+             val_dtype: Any = jnp.int32) -> "TreeConfig":
+        """Capacity planning: fixed height with min-fanout-16 safety margin."""
+        leaf_cap = max(2, -(-max_keys // max(8, leaf_fill // 3)))
+        caps: List[int] = []
+        c = leaf_cap
+        while True:
+            c = max(1, -(-c // 16))
+            caps.append(c)
+            if c == 1:
+                break
+        caps = caps[::-1]  # root first
+        return TreeConfig(key_width=key_width, ns=ns, fs=fs,
+                          leaf_fill=min(leaf_fill, ns), inner_fill=min(inner_fill, ns),
+                          n_levels=len(caps), leaf_cap=leaf_cap,
+                          level_caps=tuple(caps), key_cap=int(max_keys),
+                          val_dtype=val_dtype)
+
+
+class Level(NamedTuple):
+    knum: jnp.ndarray      # int32 [C]
+    plen: jnp.ndarray      # int32 [C]
+    prefix: jnp.ndarray    # uint8 [C, L]
+    features: jnp.ndarray  # uint8 [C, fs, ns]
+    children: jnp.ndarray  # int32 [C, ns]
+    anchors: jnp.ndarray   # int32 [C, ns]  (key ids)
+    count: jnp.ndarray     # int32 scalar — allocation watermark
+
+
+class TreeArrays(NamedTuple):
+    key_bytes: jnp.ndarray   # uint8 [KC, L]
+    key_lens: jnp.ndarray    # int32 [KC]
+    key_tags: jnp.ndarray    # uint8 [KC] hash fingerprints (computed at append)
+    key_count: jnp.ndarray   # int32 scalar
+    levels: Tuple[Level, ...]
+    leaf_tags: jnp.ndarray   # uint8 [LC, ns]
+    leaf_keyid: jnp.ndarray  # int32 [LC, ns] (-1 empty)
+    leaf_val: jnp.ndarray    # val_dtype [LC, ns]
+    leaf_occ: jnp.ndarray    # bool [LC, ns]
+    leaf_high: jnp.ndarray   # int32 [LC] key id, -1 = +inf
+    leaf_next: jnp.ndarray   # int32 [LC]
+    leaf_version: jnp.ndarray  # int32 [LC]
+    leaf_ordered: jnp.ndarray  # bool [LC]
+    leaf_count: jnp.ndarray    # int32 scalar
+
+
+@jax.tree_util.register_pytree_node_class
+class FBTree:
+    """Pytree wrapper: arrays are leaves, config is static aux data."""
+
+    def __init__(self, config: TreeConfig, arrays: TreeArrays):
+        self.config = config
+        self.arrays = arrays
+
+    def tree_flatten(self):
+        return (self.arrays,), self.config
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(aux, children[0])
+
+    # convenience accessors
+    def __getattr__(self, name):
+        if name in TreeArrays._fields:
+            return getattr(self.arrays, name)
+        raise AttributeError(name)
+
+    def replace(self, **kw) -> "FBTree":
+        return FBTree(self.config, self.arrays._replace(**kw))
+
+    @property
+    def n_keys_live(self) -> int:
+        return int(jnp.sum(self.arrays.leaf_occ))
+
+
+def _common_prefix_len(kb: np.ndarray, kl: np.ndarray) -> Tuple[int, np.ndarray]:
+    """plen + prefix bytes over rows of a [k, L] anchor byte block."""
+    L = kb.shape[1]
+    if kb.shape[0] == 1:
+        pl = int(min(kl[0], L))
+        return pl, kb[0]
+    eq = (kb == kb[:1]).all(axis=0)           # [L]
+    neq = np.nonzero(~eq)[0]
+    pl = int(neq[0]) if neq.size else L
+    pl = int(min(pl, kl.min()))
+    return pl, kb[0]
+
+
+def _build_inner_level_np(cfg: TreeConfig, child_min_keyid: np.ndarray,
+                          key_bytes: np.ndarray, key_lens: np.ndarray,
+                          fill: int) -> Tuple[dict, np.ndarray]:
+    """Group children into inner nodes; return level arrays + per-node min key id."""
+    ns, fs, L = cfg.ns, cfg.fs, cfg.key_width
+    n_child = child_min_keyid.shape[0]
+    n_nodes = max(1, -(-n_child // fill))
+    # balanced grouping
+    base = n_child // n_nodes
+    rem = n_child % n_nodes
+    sizes = np.full(n_nodes, base, dtype=np.int64)
+    sizes[:rem] += 1
+    starts = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+
+    knum = np.zeros(n_nodes, dtype=np.int32)
+    plen = np.zeros(n_nodes, dtype=np.int32)
+    prefix = np.zeros((n_nodes, L), dtype=np.uint8)
+    features = np.zeros((n_nodes, fs, ns), dtype=np.uint8)
+    children = np.full((n_nodes, ns), EMPTY, dtype=np.int32)
+    anchors = np.full((n_nodes, ns), EMPTY, dtype=np.int32)
+    node_min = np.zeros(n_nodes, dtype=np.int32)
+
+    for i in range(n_nodes):
+        s, k = int(starts[i]), int(sizes[i])
+        ids = child_min_keyid[s:s + k]
+        kb = key_bytes[ids]
+        kl = key_lens[ids]
+        pl, pfx = _common_prefix_len(kb, kl)
+        knum[i] = k
+        plen[i] = pl
+        prefix[i] = pfx
+        for f in range(fs):
+            pos = pl + f
+            if pos < L:
+                features[i, f, :k] = kb[:, pos]
+        children[i, :k] = np.arange(s, s + k, dtype=np.int32)
+        anchors[i, :k] = ids
+        node_min[i] = ids[0]
+    return dict(knum=knum, plen=plen, prefix=prefix, features=features,
+                children=children, anchors=anchors, count=np.int32(n_nodes)), node_min
+
+
+def bulk_build(cfg: TreeConfig, ks: K.KeySet, vals: np.ndarray) -> FBTree:
+    """Bulk-load a tree from (possibly unsorted) unique keys. numpy host build."""
+    ns, fs, L = cfg.ns, cfg.fs, cfg.key_width
+    n = ks.n
+    assert n <= cfg.key_cap, "key_cap exceeded"
+    order = K.lex_sort_indices(ks)
+    # every array gets one trailing scratch row (index cap) so masked scatters
+    # have a conflict-free dump target; the watermarks never reach it.
+    kb = np.zeros((cfg.key_cap + 1, L), dtype=np.uint8)
+    kl = np.zeros((cfg.key_cap + 1,), dtype=np.int32)
+    kb[:n] = ks.bytes[order]
+    kl[:n] = ks.lens[order]
+    vv = np.asarray(vals)[order]
+
+    # ---- leaves ----
+    fill = cfg.leaf_fill
+    n_leaves = max(1, -(-n // fill))
+    assert n_leaves <= cfg.leaf_cap, "leaf_cap exceeded"
+    LC = cfg.leaf_cap + 1  # + scratch row
+    leaf_tags = np.zeros((LC, ns), dtype=np.uint8)
+    leaf_keyid = np.full((LC, ns), EMPTY, dtype=np.int32)
+    leaf_val = np.zeros((LC, ns), dtype=np.asarray(vals).dtype)
+    leaf_occ = np.zeros((LC, ns), dtype=bool)
+    leaf_high = np.full((LC,), EMPTY, dtype=np.int32)
+    leaf_next = np.full((LC,), EMPTY, dtype=np.int32)
+
+    tags_all = K.fnv1a_tags(kb[:n], kl[:n])
+    base = n // n_leaves
+    rem = n % n_leaves
+    sizes = np.full(n_leaves, base, dtype=np.int64)
+    sizes[:rem] += 1
+    starts = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+    leaf_min = np.zeros(n_leaves, dtype=np.int32)
+    for i in range(n_leaves):
+        s, k = int(starts[i]), int(sizes[i])
+        leaf_keyid[i, :k] = np.arange(s, s + k, dtype=np.int32)
+        leaf_val[i, :k] = vv[s:s + k]
+        leaf_tags[i, :k] = tags_all[s:s + k]
+        leaf_occ[i, :k] = True
+        leaf_min[i] = s
+        leaf_next[i] = i + 1 if i + 1 < n_leaves else EMPTY
+        leaf_high[i] = s + k if i + 1 < n_leaves else EMPTY
+
+    # ---- inner levels bottom-up ----
+    levels_np: List[dict] = []
+    child_min = leaf_min
+    lvl_arrays, node_min = _build_inner_level_np(cfg, child_min, kb, kl, cfg.inner_fill)
+    levels_np.append(lvl_arrays)
+    while levels_np[-1]["knum"].shape[0] > 1:
+        prev_n = levels_np[-1]["knum"].shape[0]
+        lvl_arrays, node_min = _build_inner_level_np(cfg, node_min, kb, kl, cfg.inner_fill)
+        levels_np.append(lvl_arrays)
+        assert lvl_arrays["knum"].shape[0] < prev_n
+    # pad to fixed height with single-child chain roots
+    while len(levels_np) < cfg.n_levels:
+        ids = node_min[:1]
+        pl, pfx = _common_prefix_len(kb[ids], kl[ids])
+        feat = np.zeros((1, fs, ns), dtype=np.uint8)
+        for f in range(fs):
+            if pl + f < L:
+                feat[0, f, 0] = kb[ids[0], pl + f]
+        levels_np.append(dict(
+            knum=np.array([1], np.int32), plen=np.array([pl], np.int32),
+            prefix=pfx[None].copy(), features=feat,
+            children=np.full((1, ns), EMPTY, np.int32),
+            anchors=np.full((1, ns), EMPTY, np.int32),
+            count=np.int32(1)))
+        levels_np[-1]["children"][0, 0] = 0
+        levels_np[-1]["anchors"][0, 0] = ids[0]
+    levels_np = levels_np[::-1]  # root first
+    assert len(levels_np) == cfg.n_levels, (len(levels_np), cfg.n_levels)
+
+    # pad each level to its cap (+1 scratch row)
+    levels: List[Level] = []
+    for li, lv in enumerate(levels_np):
+        cap = cfg.level_caps[li]
+        cur = lv["knum"].shape[0]
+        assert cur <= cap, f"level {li}: {cur} > cap {cap}"
+
+        def pad(a, fillv=0):
+            out_shape = (cap + 1,) + a.shape[1:]
+            out = np.full(out_shape, fillv, dtype=a.dtype)
+            out[:cur] = a
+            return out
+
+        levels.append(Level(
+            knum=jnp.asarray(pad(lv["knum"])),
+            plen=jnp.asarray(pad(lv["plen"])),
+            prefix=jnp.asarray(pad(lv["prefix"])),
+            features=jnp.asarray(pad(lv["features"])),
+            children=jnp.asarray(pad(lv["children"], EMPTY)),
+            anchors=jnp.asarray(pad(lv["anchors"], EMPTY)),
+            count=jnp.asarray(lv["count"]),
+        ))
+
+    ktags = np.zeros((cfg.key_cap + 1,), dtype=np.uint8)
+    ktags[:n] = tags_all
+    arrays = TreeArrays(
+        key_bytes=jnp.asarray(kb), key_lens=jnp.asarray(kl),
+        key_tags=jnp.asarray(ktags),
+        key_count=jnp.asarray(np.int32(n)),
+        levels=tuple(levels),
+        leaf_tags=jnp.asarray(leaf_tags), leaf_keyid=jnp.asarray(leaf_keyid),
+        leaf_val=jnp.asarray(leaf_val).astype(cfg.val_dtype),
+        leaf_occ=jnp.asarray(leaf_occ),
+        leaf_high=jnp.asarray(leaf_high), leaf_next=jnp.asarray(leaf_next),
+        leaf_version=jnp.zeros((LC,), jnp.int32),
+        leaf_ordered=jnp.asarray(np.arange(LC) < n_leaves),
+        leaf_count=jnp.asarray(np.int32(n_leaves)),
+    )
+    return FBTree(cfg, arrays)
+
+
+def tree_to_device(tree: FBTree) -> FBTree:
+    return jax.tree_util.tree_map(jnp.asarray, tree)

@@ -1,0 +1,68 @@
+"""Leaf-node operations: hashtag probe (paper Fig. 6 lines 30-42) + slot ops."""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+
+from .fbtree import FBTree
+from .keys import fnv1a_tags
+
+__all__ = ["LeafStats", "probe", "find_free_slots"]
+
+
+class LeafStats(NamedTuple):
+    tag_candidates: jnp.ndarray  # int32 [B] slots passing the hashtag filter
+    lines_touched: jnp.ndarray   # int32 [B]
+
+    @staticmethod
+    def zeros(b: int):
+        z = jnp.zeros((b,), jnp.int32)
+        return LeafStats(z, z)
+
+
+def probe(tree: FBTree, leaf_ids: jnp.ndarray, qb: jnp.ndarray, ql: jnp.ndarray,
+          ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, LeafStats]:
+    """Find each query's slot in its leaf.
+
+    Returns (found [B]bool, slot [B]int32, val [B], stats). The hashtag filter
+    narrows candidates exactly as the paper's ``compare_equal(tags, tag)``;
+    verification compares full key bytes (lines 36-38). The jnp oracle
+    verifies all candidates at once; the Pallas kernel (kernels/leaf_probe)
+    streams tag rows first and touches key lines only for candidates.
+    """
+    a = tree.arrays
+    ns = a.leaf_tags.shape[-1]
+    qtag = fnv1a_tags(qb, ql)
+    tags = a.leaf_tags[leaf_ids]              # [B, ns]
+    occ = a.leaf_occ[leaf_ids]
+    cand = (tags == qtag[:, None]) & occ
+    kid = a.leaf_keyid[leaf_ids]              # [B, ns]
+    kid_safe = jnp.maximum(kid, 0)
+    akb = a.key_bytes[kid_safe]               # [B, ns, L]
+    akl = a.key_lens[kid_safe]
+    eqfull = (akb == qb[:, None, :]).all(-1) & (akl == ql[:, None]) & cand
+    found = eqfull.any(-1)
+    slot = jnp.argmax(eqfull, axis=-1).astype(jnp.int32)
+    val = jnp.take_along_axis(a.leaf_val[leaf_ids], slot[:, None], axis=-1)[:, 0]
+    val = jnp.where(found, val, 0)
+    n_cand = cand.sum(-1).astype(jnp.int32)
+    kw_lines = (ql + 63) // 64
+    stats = LeafStats(
+        tag_candidates=n_cand,
+        # modeled: control+tags row (ns bytes -> ns/64 lines) + bitmap word +
+        # per-candidate kv pointer line + key line(s)
+        lines_touched=(max(1, ns // 64) + 1 + n_cand * (1 + kw_lines)).astype(jnp.int32),
+    )
+    return found, slot, val, stats
+
+
+def find_free_slots(occ_row: jnp.ndarray, count: jnp.ndarray) -> jnp.ndarray:
+    """Rank free slots of a leaf row: returns int32 [ns] where entry r is the
+    slot index of the r-th free slot (ns if fewer free slots exist)."""
+    ns = occ_row.shape[-1]
+    free = ~occ_row
+    order = jnp.argsort(jnp.where(free, jnp.arange(ns), ns + jnp.arange(ns)))
+    nfree = free.sum()
+    rank_valid = jnp.arange(ns) < jnp.minimum(nfree, count)
+    return jnp.where(rank_valid, order, ns)

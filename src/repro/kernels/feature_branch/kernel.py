@@ -1,0 +1,107 @@
+"""Pallas TPU kernel for FB+-tree feature comparison (paper Fig. 6 lines 7-19).
+
+Hardware adaptation (DESIGN.md §2): AVX-512 compares 64 anchor bytes per
+instruction with 64-bit scalar mask registers; the TPU VPU operates on
+(sublane, lane) = (8, 128) vector tiles. We therefore keep per-anchor masks
+*vectorized* over the lane dimension (one lane per anchor) and replace the
+paper's LZCNT/TZCNT bit tricks (`index_least1`, `countl_zero`) with masked
+iota min/max reductions — cheaper than any cross-lane bit packing on TPU.
+The natural TPU node size is ns=128 (one full lane row); ns=64 (the paper's
+AVX-512 choice) half-fills lanes and is supported for faithfulness.
+
+Inputs are per-query gathered node rows (the gather runs in XLA, which on TPU
+lowers to efficient dynamic-slice streams; the kernel owns the compare/reduce
+hot loop):
+  feats [B, fs, ns] uint8   transposed feature rows
+  qfeat [B, fs]     uint8   query bytes following each node's common prefix
+  knum  [B, 1]      int32   anchors per node
+  pcmp  [B, 1]      int32   3-way prefix compare result
+
+Outputs:
+  idx      [B, 1] int32  resolved child index (valid where resolved)
+  resolved [B, 1] int32  1 = branch decided without suffix binary search
+  run_lo/run_hi [B,1]    surviving equal-run bounds for the fallback search
+  rounds   [B, 1] int32  feature rows consumed (paper-comparable counter)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_TILE_B = 256
+
+
+def _kernel(feats_ref, qfeat_ref, knum_ref, pcmp_ref,
+            idx_ref, resolved_ref, lo_ref, hi_ref, rounds_ref, *, fs: int,
+            ns: int):
+    feats = feats_ref[...]                      # [TB, fs, ns] uint8
+    qfeat = qfeat_ref[...]                      # [TB, fs] uint8
+    knum = knum_ref[...]                        # [TB, 1] int32
+    pcmp = pcmp_ref[...]                        # [TB, 1] int32
+    TB = feats.shape[0]
+
+    lane = jax.lax.broadcasted_iota(jnp.int32, (TB, ns), 1)
+    valid = lane < knum                         # [TB, ns]
+    eq = valid
+    resolved = jnp.zeros((TB, 1), jnp.bool_)
+    idx = jnp.zeros((TB, 1), jnp.int32)
+    rounds = jnp.zeros((TB, 1), jnp.int32)
+    kmax = jnp.maximum(knum - 1, 0)
+
+    for fid in range(fs):                       # unrolled: fs is 2..8
+        qb = qfeat[:, fid:fid + 1]              # [TB, 1] uint8
+        frow = feats[:, fid, :]                 # [TB, ns] uint8
+        m = (frow == qb) & eq
+        none_eq = ~m.any(axis=-1, keepdims=True)
+        less = (frow < qb) & eq
+        lo = jnp.min(jnp.where(eq, lane, ns), axis=-1, keepdims=True)
+        cnt_less = jnp.sum(less.astype(jnp.int32), axis=-1, keepdims=True)
+        res_idx = jnp.clip(lo + cnt_less - 1, 0, kmax)
+        newly = none_eq & ~resolved
+        idx = jnp.where(newly, res_idx, idx)
+        rounds = rounds + (~resolved).astype(jnp.int32)
+        resolved = resolved | none_eq
+        eq = jnp.where(resolved, eq, m)
+
+    run_lo = jnp.min(jnp.where(eq, lane, ns), axis=-1, keepdims=True)
+    run_hi = jnp.max(jnp.where(eq, lane, -1), axis=-1, keepdims=True)
+
+    idx = jnp.where(pcmp < 0, 0, idx)
+    idx = jnp.where(pcmp > 0, kmax, idx)
+    resolved = resolved | (pcmp != 0)
+    trivial = knum <= 1
+    idx = jnp.where(trivial, 0, idx)
+    resolved = resolved | trivial
+    rounds = jnp.where(trivial, 0, rounds)
+
+    idx_ref[...] = idx
+    resolved_ref[...] = resolved.astype(jnp.int32)
+    lo_ref[...] = run_lo
+    hi_ref[...] = run_hi
+    rounds_ref[...] = rounds
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b", "interpret"))
+def feature_branch_kernel(feats, qfeat, knum, pcmp, tile_b: int = DEFAULT_TILE_B,
+                          interpret: bool = True):
+    """B must be a multiple of tile_b (ops.py pads)."""
+    B, fs, ns = feats.shape
+    assert B % tile_b == 0, (B, tile_b)
+    grid = (B // tile_b,)
+    out_sds = [jax.ShapeDtypeStruct((B, 1), jnp.int32)] * 5
+    kern = functools.partial(_kernel, fs=fs, ns=ns)
+    vec = lambda blk: pl.BlockSpec(blk, lambda i: (i,) + (0,) * (len(blk) - 1),
+                                   memory_space=pltpu.VMEM)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[vec((tile_b, fs, ns)), vec((tile_b, fs)),
+                  vec((tile_b, 1)), vec((tile_b, 1))],
+        out_specs=[vec((tile_b, 1))] * 5,
+        out_shape=out_sds,
+        interpret=interpret,
+    )(feats, qfeat, knum, pcmp)

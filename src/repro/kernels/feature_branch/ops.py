@@ -1,0 +1,99 @@
+"""Jitted wrapper: full branch_level built on the feature_branch kernel.
+
+Swappable with core.branch.branch_level — the gather / prefix-compare /
+suffix-binary-search stages run in XLA, the feature-comparison hot loop in
+Pallas (interpret mode off-TPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.branch import BranchStats, _first_diff_cmp
+from repro.core.keys import compare_padded
+
+from .kernel import feature_branch_kernel
+from .ref import feature_branch_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def feature_branch(feats, qfeat, knum, pcmp, use_pallas: bool = True,
+                   tile_b: int = 256):
+    """Pad-to-tile wrapper around the kernel (or the jnp oracle)."""
+    B = feats.shape[0]
+    if not use_pallas:
+        return feature_branch_ref(feats, qfeat, knum, pcmp)
+    Bp = -(-B // tile_b) * tile_b
+    if Bp != B:
+        padw = [(0, Bp - B)] + [(0, 0)] * (feats.ndim - 1)
+        feats = jnp.pad(feats, padw)
+        qfeat = jnp.pad(qfeat, [(0, Bp - B), (0, 0)])
+        knum = jnp.pad(knum, [(0, Bp - B), (0, 0)])
+        pcmp = jnp.pad(pcmp, [(0, Bp - B), (0, 0)])
+    outs = feature_branch_kernel(feats, qfeat, knum, pcmp, tile_b=tile_b,
+                                 interpret=not _on_tpu())
+    return tuple(o[:B] for o in outs)
+
+
+def branch_level_pallas(level, key_bytes, key_lens, node_ids, qb, ql,
+                        use_pallas: bool = True):
+    """Drop-in replacement for core.branch.branch_level using the kernel."""
+    B = node_ids.shape[0]
+    ns = level.features.shape[-1]
+    fs = level.features.shape[-2]
+    L = qb.shape[-1]
+    lines_per_row = max(1, ns // 64)
+
+    knum = level.knum[node_ids]
+    plen = level.plen[node_ids]
+    prefix = level.prefix[node_ids]
+    feats = level.features[node_ids]
+
+    pcmp = _first_diff_cmp(qb, prefix, plen)
+    # query feature bytes following the per-node prefix
+    qpos = plen[:, None] + jnp.arange(fs, dtype=jnp.int32)[None, :]
+    qfeat = jnp.take_along_axis(qb, jnp.clip(qpos, 0, L - 1), axis=-1)
+    qfeat = jnp.where(qpos < L, qfeat, 0).astype(jnp.uint8)
+
+    idx1, resolved, run_lo, run_hi, rounds = feature_branch(
+        feats, qfeat, knum[:, None], pcmp[:, None], use_pallas=use_pallas)
+    idx = idx1[:, 0]
+    resolved = resolved[:, 0].astype(bool)
+    lo, hi = run_lo[:, 0], run_hi[:, 0]
+    feat_rounds = rounds[:, 0]
+
+    # suffix binary search fallback (XLA: data-dependent gathers)
+    need_bs = ~resolved
+    lo_b, hi_b = lo, hi + 1
+    anchors = level.anchors[node_ids]
+    key_cmp = jnp.zeros((B,), jnp.int32)
+    for _ in range(max(1, ns.bit_length())):
+        active = lo_b < hi_b
+        mid = jnp.clip((lo_b + hi_b) // 2, 0, ns - 1)
+        aid = jnp.take_along_axis(anchors, mid[:, None], axis=-1)[:, 0]
+        aid_safe = jnp.maximum(aid, 0)
+        c = compare_padded(key_bytes[aid_safe], key_lens[aid_safe], qb, ql)
+        go_right = c <= 0
+        lo_b = jnp.where(active & go_right, mid + 1, lo_b)
+        hi_b = jnp.where(active & ~go_right, mid, hi_b)
+        key_cmp = key_cmp + (active & need_bs).astype(jnp.int32)
+    bs_idx = jnp.clip(lo_b - 1, 0, jnp.maximum(knum - 1, 0))
+    idx = jnp.where(need_bs, bs_idx, idx)
+
+    child = jnp.take_along_axis(level.children[node_ids], idx[:, None],
+                                axis=-1)[:, 0]
+    trivial = knum <= 1
+    nz = lambda x: jnp.where(trivial, 0, x).astype(jnp.int32)
+    kw_lines = (ql + 63) // 64
+    stats = BranchStats(
+        feat_rounds=nz(feat_rounds),
+        suffix_bs=nz(need_bs.astype(jnp.int32)),
+        key_compares=nz(key_cmp),
+        lines_touched=nz(1 + feat_rounds * lines_per_row
+                         + key_cmp * (1 + kw_lines) + 1),
+        sibling_hops=jnp.zeros((B,), jnp.int32),
+    )
+    return child, stats

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the feature_branch kernel (same math as core.branch)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def feature_branch_ref(feats, qfeat, knum, pcmp):
+    """feats [B,fs,ns] u8, qfeat [B,fs] u8, knum/pcmp [B,1] i32 ->
+    (idx, resolved, run_lo, run_hi, rounds), each [B,1] int32."""
+    B, fs, ns = feats.shape
+    lane = jnp.arange(ns, dtype=jnp.int32)[None, :]
+    valid = lane < knum
+    eq = valid
+    resolved = jnp.zeros((B, 1), bool)
+    idx = jnp.zeros((B, 1), jnp.int32)
+    rounds = jnp.zeros((B, 1), jnp.int32)
+    kmax = jnp.maximum(knum - 1, 0)
+    for fid in range(fs):
+        qb = qfeat[:, fid:fid + 1]
+        frow = feats[:, fid, :]
+        m = (frow == qb) & eq
+        none_eq = ~m.any(-1, keepdims=True)
+        less = (frow < qb) & eq
+        lo = jnp.min(jnp.where(eq, lane, ns), axis=-1, keepdims=True)
+        cnt_less = less.sum(-1, keepdims=True).astype(jnp.int32)
+        res_idx = jnp.clip(lo + cnt_less - 1, 0, kmax)
+        newly = none_eq & ~resolved
+        idx = jnp.where(newly, res_idx, idx)
+        rounds = rounds + (~resolved).astype(jnp.int32)
+        resolved = resolved | none_eq
+        eq = jnp.where(resolved, eq, m)
+    run_lo = jnp.min(jnp.where(eq, lane, ns), axis=-1, keepdims=True)
+    run_hi = jnp.max(jnp.where(eq, lane, -1), axis=-1, keepdims=True)
+    idx = jnp.where(pcmp < 0, 0, idx)
+    idx = jnp.where(pcmp > 0, kmax, idx)
+    resolved = resolved | (pcmp != 0)
+    trivial = knum <= 1
+    idx = jnp.where(trivial, 0, idx)
+    resolved = resolved | trivial
+    rounds = jnp.where(trivial, 0, rounds)
+    return (idx, resolved.astype(jnp.int32), run_lo, run_hi, rounds)

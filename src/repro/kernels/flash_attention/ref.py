@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash-attention kernel: the exact small-path
+sdpa from models.attention (single materialized softmax)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import MaskSpec, _sdpa_small
+
+
+def flash_attention_ref(q, k, v, *, scale: float, kv_len: int,
+                        causal: bool = True, window: int = 0,
+                        prefix_len: int = 0):
+    """q [BH,S,hd], k/v [BH,T,hv] (kv already head-repeated). -> [BH,S,hv]."""
+    BH, S, hd = q.shape
+    T = k.shape[1]
+    spec = MaskSpec("causal" if causal else "full", window, prefix_len)
+    kmask = jnp.arange(T) < kv_len
+    # fold kv-length masking into key padding with -inf via a huge negative
+    # position trick: easiest is slicing since kv_len is static here
+    qq = q[:, :, None, :]          # [BH, S, 1, hd]
+    kk = k[:, :kv_len][:, :, None, :]
+    vv = v[:, :kv_len][:, :, None, :]
+    out = _sdpa_small(qq, kk, vv, spec, 1, scale=scale)
+    out = out.reshape(BH, S, v.shape[-1])
+    # rows with NO valid key (e.g. window entirely beyond kv_len) are
+    # degenerate; the kernel's convention returns 0 for them — match it
+    # (a bare softmax returns uniform weights over the -inf row instead)
+    row_valid = spec.tile(jnp.arange(S), jnp.arange(kv_len)).any(-1)
+    return jnp.where(row_valid[None, :, None], out, 0.0)

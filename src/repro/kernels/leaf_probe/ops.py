@@ -1,0 +1,59 @@
+"""Jitted wrapper: full leaf probe (tag filter kernel + exact verify in XLA)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.keys import fnv1a_tags
+from repro.core.leaf import LeafStats
+
+from .kernel import leaf_probe_kernel
+from .ref import leaf_probe_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def leaf_probe(tags, occ, qtag, use_pallas: bool = True, tile_b: int = 512):
+    B = tags.shape[0]
+    if not use_pallas:
+        return leaf_probe_ref(tags, occ, qtag)
+    Bp = -(-B // tile_b) * tile_b
+    if Bp != B:
+        tags = jnp.pad(tags, [(0, Bp - B), (0, 0)])
+        occ = jnp.pad(occ, [(0, Bp - B), (0, 0)])
+        qtag = jnp.pad(qtag, [(0, Bp - B), (0, 0)], constant_values=1)
+    outs = leaf_probe_kernel(tags, occ.astype(jnp.uint8), qtag,
+                             tile_b=tile_b, interpret=not _on_tpu())
+    return tuple(o[:B] for o in outs)
+
+
+def probe_pallas(tree, leaf_ids, qb, ql, use_pallas: bool = True):
+    """Drop-in replacement for core.leaf.probe using the kernel for the
+    hashtag filter; exact verification gathers only candidate slots."""
+    a = tree.arrays
+    ns = a.leaf_tags.shape[-1]
+    qtag = fnv1a_tags(qb, ql)
+    tags = a.leaf_tags[leaf_ids]
+    occ = a.leaf_occ[leaf_ids]
+    cand_u8, first, count = leaf_probe(tags, occ, qtag[:, None],
+                                       use_pallas=use_pallas)
+    cand = cand_u8 != 0
+    kid = a.leaf_keyid[leaf_ids]
+    kid_safe = jnp.maximum(kid, 0)
+    akb = a.key_bytes[kid_safe]
+    akl = a.key_lens[kid_safe]
+    eqfull = (akb == qb[:, None, :]).all(-1) & (akl == ql[:, None]) & cand
+    found = eqfull.any(-1)
+    slot = jnp.argmax(eqfull, axis=-1).astype(jnp.int32)
+    val = jnp.take_along_axis(a.leaf_val[leaf_ids], slot[:, None], axis=-1)[:, 0]
+    val = jnp.where(found, val, 0)
+    n_cand = count[:, 0]
+    kw_lines = (ql + 63) // 64
+    stats = LeafStats(
+        tag_candidates=n_cand,
+        lines_touched=(max(1, ns // 64) + 1 + n_cand * (1 + kw_lines)
+                       ).astype(jnp.int32),
+    )
+    return found, slot, val, stats

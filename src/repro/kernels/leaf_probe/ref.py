@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the leaf_probe kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def leaf_probe_ref(tags, occ, qtag):
+    B, ns = tags.shape
+    cand = (tags == qtag) & (occ != 0)
+    lane = jnp.arange(ns, dtype=jnp.int32)[None, :]
+    first = jnp.min(jnp.where(cand, lane, ns), axis=-1, keepdims=True)
+    count = cand.sum(-1, keepdims=True).astype(jnp.int32)
+    return cand.astype(jnp.uint8), first, count

@@ -1,0 +1,262 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: params,
+optimizer state, batch and caches exist only as ShapeDtypeStructs; jit
+lowers with the production shardings; ``compile()`` runs the full SPMD
+partitioner + layout pipeline; memory/cost analyses feed §Dry-run and
+§Roofline of EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --arch all --shape all --mesh both --out out/
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCH_IDS, SHAPES, applicable, get_config,
+                           input_specs)
+from repro.launch import hlo_analysis as H
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.parallel import sharding as SH
+from repro.train import optim as O
+from repro.train.train_step import init_state, make_train_step
+
+SDS = jax.ShapeDtypeStruct
+
+
+def opt_for(cfg: ModelConfig) -> O.OptConfig:
+    # the 671B fits 512 chips only with factored second moments (DESIGN.md §5)
+    total, _ = cfg.param_count()
+    kind = "adafactor" if total > 100e9 else "adamw"
+    return O.OptConfig(kind=kind)
+
+
+def train_remat(cfg: ModelConfig) -> str:
+    return "full"        # baseline policy; §Perf iterates on this
+
+
+def model_flops(cfg: ModelConfig, shape: str) -> float:
+    sp = SHAPES[shape]
+    total, active = cfg.param_count()
+    D = sp.seq_len * sp.global_batch
+    if sp.kind == "train":
+        return 6.0 * active * D
+    if sp.kind == "prefill":
+        return 2.0 * active * D
+    return 2.0 * active * sp.global_batch      # one token per sequence
+
+
+def _sds_tree(tree):
+    return jax.tree_util.tree_map(
+        lambda l: SDS(l.shape, l.dtype), tree)
+
+
+def build_cell(cfg: ModelConfig, shape: str, mesh, fsdp: bool = False,
+               n_micro: int = 1, hd_shard: bool = False):
+    """Returns (fn, arg_sds, in_shardings, out_shardings)."""
+    sp = SHAPES[shape]
+    specs = input_specs(cfg, shape)
+    ctx = SH.ShardCtx(mesh)
+    shard = SH.shard
+
+    if sp.kind == "train":
+        ocfg = opt_for(cfg)
+        if cfg.remat == "none":          # caller may have set a policy
+            cfg = dataclasses.replace(cfg, remat=train_remat(cfg))
+        state_sds = jax.eval_shape(
+            lambda: init_state(cfg, ocfg, jax.random.PRNGKey(0)))
+        pshard = SH.param_shardings(state_sds["params"], mesh, fsdp=fsdp)
+        oshard = O.opt_state_shardings(state_sds["opt"], pshard, mesh)
+        state_shardings = {"params": pshard, "opt": oshard}
+        batch_sds = specs
+        bshard = SH.batch_shardings(batch_sds, mesh)
+        step = make_train_step(cfg, ocfg, shard=shard, n_micro=n_micro)
+        fn = lambda state, batch: step(state, batch)
+        metr_shard = None  # replicated outputs
+        in_sh = (state_shardings, bshard)
+        out_sh = (state_shardings, None)
+        return fn, (state_sds, batch_sds), in_sh, out_sh, ctx
+
+    params_sds = jax.eval_shape(
+        lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
+    pshard = SH.param_shardings(params_sds, mesh, fsdp=False,
+                                hd_shard=hd_shard)
+    if sp.kind == "prefill":
+        batch_sds = specs
+        bshard = SH.batch_shardings(batch_sds, mesh)
+        cache_len = sp.seq_len + 128     # room to decode after prefill
+        fn = lambda params, batch: lm.prefill(params, cfg, batch, cache_len,
+                                              SH.shard)
+        cache_sds = jax.eval_shape(
+            lambda: lm.init_cache(cfg, sp.global_batch, cache_len))
+        cshard = SH.cache_shardings(cache_sds, mesh)
+        lshard = None
+        return (fn, (params_sds, batch_sds), (pshard, bshard),
+                (lshard, cshard), ctx)
+
+    # decode: one token against a full cache
+    B, S = sp.global_batch, sp.seq_len
+    cache_sds = jax.eval_shape(lambda: lm.init_cache(cfg, B, S))
+    cshard = SH.cache_shardings(cache_sds, mesh)
+    tok_sds = specs["tokens"]
+    pos_sds = specs["pos"]
+    ba = SH.batch_axes(mesh)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    dpp = SH.axis_size(mesh, *ba)
+    tshard = NamedSharding(mesh, P(ba if B % dpp == 0 else None))
+    fn = lambda params, tok, pos, cache: lm.decode_step(
+        params, cfg, tok, pos, cache, SH.shard)
+    return (fn, (params_sds, tok_sds, pos_sds, cache_sds),
+            (pshard, tshard, tshard, cshard), (None, cshard), ctx)
+
+
+def optimized_profile(arch: str, shape: str) -> Dict:
+    """The §Perf-winning settings per family (EXPERIMENTS.md):
+    FSDP for all training; cumsum scan for mamba1; dots-remat for SSM
+    (NOT for MoE — saves the one-hot einsum outputs); head-dim sharding
+    for decode of non-divisible-head archs."""
+    cfg = get_config(arch)
+    kind = SHAPES[shape].kind
+    prof: Dict = {}
+    if kind == "train":
+        prof["fsdp"] = True
+        if cfg.family == "ssm" and cfg.ssm_version == 1:
+            prof["ssm_scan"] = "cumsum"
+        if cfg.family in ("ssm", "hybrid"):
+            prof["remat"] = "dots"
+    if kind == "decode" and cfg.n_heads % 16 != 0 and cfg.hd % 16 == 0:
+        prof["hd_shard"] = True
+    return prof
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, fsdp: bool = False,
+             n_micro: int = 1, moe_impl: Optional[str] = None,
+             remat: Optional[str] = None, hd_shard: bool = False,
+             ssm_scan: Optional[str] = None,
+             dump_hlo: Optional[str] = None,
+             profile: Optional[str] = None) -> Dict:
+    if profile == "optimized":
+        prof = optimized_profile(arch, shape)
+        fsdp = prof.get("fsdp", fsdp)
+        remat = prof.get("remat", remat)
+        hd_shard = prof.get("hd_shard", hd_shard)
+        ssm_scan = prof.get("ssm_scan", ssm_scan)
+    cfg = get_config(arch)
+    if moe_impl and cfg.n_experts:
+        cfg = dataclasses.replace(cfg, moe_impl=moe_impl)
+    if ssm_scan:
+        cfg = dataclasses.replace(cfg, ssm_scan=ssm_scan)
+    ok, why = applicable(cfg, shape)
+    rec: Dict = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                 "n_micro": n_micro, "moe_impl": cfg.moe_impl}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.devices.size
+    if remat:
+        cfg = dataclasses.replace(cfg, remat=remat)
+    t0 = time.time()
+    fn, args_sds, in_sh, out_sh, ctx = build_cell(cfg, shape, mesh,
+                                                  fsdp=fsdp, n_micro=n_micro,
+                                                  hd_shard=hd_shard)
+    try:
+        with mesh, ctx:
+            jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+            lowered = jfn.lower(*args_sds)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        ca = compiled.cost_analysis() or {}
+        try:
+            ma = compiled.memory_analysis()
+            mem = {k: int(getattr(ma, k)) for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+                "alias_size_in_bytes") if hasattr(ma, k)}
+        except Exception:
+            mem = {}
+        hlo = compiled.as_text()
+        if dump_hlo:
+            with open(dump_hlo, "w") as f:
+                f.write(hlo)
+        st = H.analyze_hlo(hlo)            # loop-corrected static analysis
+        flops_pd = float(st["flops"])
+        bytes_pd = float(st["traffic_bytes"])
+        colls = st["collectives"]
+        wire_pd = sum(d["wire_bytes"] for d in colls.values())
+        mf = model_flops(cfg, shape)
+        roof = H.roofline(flops_pd, bytes_pd, wire_pd, mf, n_chips)
+        roof["xla_cost_flops_pd_loop_once"] = float(ca.get("flops", 0.0))
+        rec.update(
+            status="ok", n_chips=n_chips,
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            flops_per_device=flops_pd, bytes_per_device=bytes_pd,
+            collectives={k: {kk: (int(vv) if kk == "count" else float(vv))
+                             for kk, vv in v.items()}
+                         for k, v in colls.items()},
+            collective_wire_bytes_pd=wire_pd,
+            top_traffic=st["top_traffic"][:8],
+            top_flops=st["top_flops"][:6],
+            memory_analysis=mem, roofline=roof,
+            params_total=cfg.param_count()[0],
+            params_active=cfg.param_count()[1],
+        )
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--fsdp", type=int, default=0)
+    ap.add_argument("--hd-shard", type=int, default=0)
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--moe-impl", default=None)
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--profile", default=None,
+                    choices=[None, "baseline", "optimized"])
+    args = ap.parse_args()
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    recs = []
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                r = run_cell(a, s, m, fsdp=bool(args.fsdp),
+                             n_micro=args.n_micro, moe_impl=args.moe_impl,
+                             remat=args.remat, hd_shard=bool(args.hd_shard),
+                             profile=args.profile)
+                recs.append(r)
+                line = {k: v for k, v in r.items()
+                        if k not in ("trace", "collectives", "top_traffic",
+                                     "top_flops", "memory_analysis")}
+                print(json.dumps(line), flush=True)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(recs, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

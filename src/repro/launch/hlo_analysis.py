@@ -1,0 +1,449 @@
+"""Post-SPMD HLO static analysis: loop-corrected FLOPs / HBM traffic /
+collective bytes + roofline terms.
+
+Why not just ``compiled.cost_analysis()``: XLA's HloCostAnalysis visits a
+``while`` body ONCE — scan-over-layers models under-count by ~n_layers.
+This module parses the optimized HLO text (computations, symbol tables,
+``backend_config known_trip_count``), and aggregates
+
+  flops    — dot/convolution MACs ×2 (elementwise excluded: <2% here)
+  traffic  — Σ (operand + result bytes) of top-level ops in *control*
+             computations (ENTRY / loop bodies); fusion internals excluded —
+             a fusion's HBM traffic is its operands + outputs. An upper
+             bound (no buffer-reuse modeling); CPU lowering also converts
+             some bf16 compute to f32, so treat as conservative.
+  collectives — per kind: count, payload bytes, ring-model wire bytes
+
+with every quantity multiplied by its enclosing loops' trip counts.
+Hardware constants (assignment): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e3m4": 1, "u1": 1, "s1": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\s*\{\s*$")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^()]*\)|[\w\[\],{}\s/*]+?))\s*"
+    r"([\w\-]+)\((.*)$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_ATTR = re.compile(r"(?:calls|body|condition|to_apply)=%([\w.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_NO_TRAFFIC = {
+    "parameter", "get-tuple-element", "tuple", "bitcast", "constant",
+    "after-all", "partition-id", "replica-id", "iota",
+    "rng-get-and-update-state",
+    # call-like ops: their bodies are accounted via recursion; carried
+    # buffers alias in place
+    "while", "conditional", "call",
+}
+# ops a TPU backend fuses into consumers — a fusion made ONLY of these is a
+# layout/dtype transform whose output never hits HBM on the target (the CPU
+# backend materializes f32 converts of bf16 weights; counting those would
+# double every weight read)
+_TRANSFORM_OPS = {
+    "parameter", "constant", "convert", "bitcast", "reshape", "transpose",
+    "copy", "dynamic-slice", "slice", "broadcast", "get-tuple-element",
+    "tuple", "iota",
+}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in m.group(2).split(",") if d]
+        out.append((dt, dims))
+    return out
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+class Op:
+    __slots__ = ("name", "type_str", "opcode", "rest")
+
+    def __init__(self, name, type_str, opcode, rest):
+        self.name, self.type_str = name, type_str
+        self.opcode, self.rest = opcode, rest
+
+
+class Computation:
+    def __init__(self, name: str, is_entry: bool):
+        self.name = name
+        self.is_entry = is_entry
+        self.ops: List[Op] = []
+        self.symbols: Dict[str, str] = {}
+        self.root: Optional[Op] = None
+
+
+def parse_module(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        h = _COMP_HDR.match(line)
+        if h:
+            cur = Computation(h.group(2), bool(h.group(1)))
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        op = Op(m.group(1), m.group(2).strip(), m.group(3), m.group(4))
+        cur.ops.append(op)
+        cur.symbols[op.name] = op.type_str
+        if "ROOT " in line:
+            cur.root = op
+    return comps
+
+
+def _update_bytes(op: Op, c: "Computation") -> Optional[int]:
+    """For dynamic-update-slice / scatter: bytes of the update operand."""
+    names = _OPERAND_RE.findall(op.rest.split("), ")[0])
+    if len(names) >= 2:
+        t = c.symbols.get(names[1])
+        if t:
+            return _type_bytes(t)
+    return None
+
+
+_PARAM_IDX_RE = re.compile(r"parameter\((\d+)\)")
+_SLICERS = ("dynamic-slice", "gather", "slice")
+
+
+def _fusion_param_effective_bytes(fc: "Computation") -> Dict[int, int]:
+    """Per-parameter effective read bytes of a fused computation.
+
+    A parameter consumed ONLY through slicing ops (dynamic-slice / gather /
+    slice, possibly via bitcast/reshape/convert-of-slice chains) reads just
+    the slices, not the whole buffer (the scan-xs / KV-cache access
+    pattern). Returns {param_index: bytes}; params not in the map read their
+    full size.
+    """
+    users: Dict[str, List[Op]] = {}
+    param_idx: Dict[str, int] = {}
+    for op in fc.ops:
+        if op.opcode == "parameter":
+            # op.rest is what follows "parameter(" — i.e. "<idx>)..."
+            m = re.match(r"(\d+)\)", op.rest)
+            if m:
+                param_idx[op.name] = int(m.group(1))
+        for om in _OPERAND_RE.finditer(op.rest):
+            users.setdefault(om.group(1), []).append(op)
+    out: Dict[int, int] = {}
+    for pname, idx in param_idx.items():
+        frontier = [pname]
+        slice_bytes = 0
+        ok = True
+        seen = set()
+        while frontier and ok:
+            nm = frontier.pop()
+            if nm in seen:
+                continue
+            seen.add(nm)
+            for u in users.get(nm, []):
+                if u.opcode in _SLICERS:
+                    slice_bytes += _type_bytes(u.type_str)
+                elif u.opcode in ("bitcast", "reshape", "transpose", "copy",
+                                  "convert"):
+                    frontier.append(u.name)
+                elif u.opcode == "dynamic-update-slice":
+                    # base buffer of an in-place update: aliased, not read
+                    names = _OPERAND_RE.findall(u.rest)
+                    if names and names[0] == nm:
+                        continue
+                    ok = False
+                else:
+                    ok = False
+        if ok and slice_bytes >= 0:
+            out[idx] = slice_bytes
+    return out
+
+
+def _group_size(rest: str, default: int = 2) -> int:
+    g = _GROUPS_RE.search(rest)
+    if g:
+        items = [x for x in g.group(1).split(",") if x.strip() != ""]
+        return max(len(items), 1)
+    gi = _GROUPS_IOTA_RE.search(rest)
+    if gi:
+        return max(int(gi.group(2)), 1)
+    return default
+
+
+_META_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def _op_tag(op: Op) -> str:
+    m = _META_RE.search(op.rest)
+    if not m:
+        return f"{op.opcode}:{op.type_str.split('{')[0][:40]}"
+    name = m.group(1)
+    # keep the source-level suffix (most informative path segment)
+    parts = [p for p in name.split("/") if p and not p.startswith("jit(")]
+    return "/".join(parts[-3:]) if parts else op.opcode
+
+
+class Analysis:
+    def __init__(self):
+        self.flops = 0.0
+        self.traffic = 0.0
+        self.colls: Dict[str, Dict[str, float]] = {}
+        self.by_tag: Dict[str, List[float]] = {}   # tag -> [traffic, flops]
+
+    def tag(self, op: Op, traffic: float, flops: float):
+        t = self.by_tag.setdefault(_op_tag(op), [0.0, 0.0])
+        t[0] += traffic
+        t[1] += flops
+
+    def add(self, other: "Analysis", mult: float):
+        self.flops += other.flops * mult
+        self.traffic += other.traffic * mult
+        for k, v in other.colls.items():
+            d = self.colls.setdefault(
+                k, {"count": 0.0, "bytes": 0.0, "wire_bytes": 0.0})
+            for kk in d:
+                d[kk] += v[kk] * mult
+        for k, (tr, fl) in other.by_tag.items():
+            t = self.by_tag.setdefault(k, [0.0, 0.0])
+            t[0] += tr * mult
+            t[1] += fl * mult
+
+
+def analyze_hlo(hlo: str) -> Dict:
+    comps = parse_module(hlo)
+    _fusion_eff_cache: Dict[str, Dict[int, int]] = {}
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    # mark control computations (reachable via while/cond/entry, not fusions)
+    fused = set()
+    for c in comps.values():
+        for op in c.ops:
+            if op.opcode == "fusion":
+                m = re.search(r"calls=%([\w.\-]+)", op.rest)
+                if m:
+                    fused.add(m.group(1))
+
+    memo: Dict[str, Analysis] = {}
+
+    def analyze(name: str, control: bool) -> Analysis:
+        key = name + ("|c" if control else "|f")
+        if key in memo:
+            return memo[key]
+        a = Analysis()
+        memo[key] = a
+        c = comps.get(name)
+        if c is None:
+            return a
+        for op in c.ops:
+            oc = op.opcode
+            out_bytes = _type_bytes(op.type_str)
+            # ---- flops
+            if oc in ("dot", "convolution"):
+                cd = _CDIMS_RE.search(op.rest)
+                k = 1
+                if cd:
+                    lhs_name = _OPERAND_RE.search(op.rest)
+                    lhs_t = c.symbols.get(lhs_name.group(1), "") if lhs_name \
+                        else ""
+                    dims = _shape_dims(lhs_t)
+                    if dims:
+                        ldims = dims[0][1]
+                        for i in [int(x) for x in cd.group(1).split(",") if x]:
+                            if i < len(ldims):
+                                k *= ldims[i]
+                out_elems = 0
+                for dt, dd in _shape_dims(op.type_str):
+                    n = 1
+                    for d in dd:
+                        n *= d
+                    out_elems += n
+                a.flops += 2.0 * out_elems * k
+                a.tag(op, 0.0, 2.0 * out_elems * k)
+            # ---- collectives
+            base = oc[:-6] if oc.endswith("-start") else oc
+            if base in _COLLECTIVES:
+                gsize = _group_size(op.rest)
+                ring = (gsize - 1) / gsize
+                nb = out_bytes
+                if base == "all-reduce":
+                    wire = 2 * ring * nb
+                elif base in ("all-gather", "reduce-scatter", "all-to-all"):
+                    wire = ring * nb
+                else:
+                    wire = nb
+                d = a.colls.setdefault(
+                    base, {"count": 0.0, "bytes": 0.0, "wire_bytes": 0.0})
+                d["count"] += 1
+                d["bytes"] += nb
+                d["wire_bytes"] += wire
+            # ---- traffic (control computations only); in-place and
+            # slicing ops count the *moved* bytes, not whole buffers
+            if control and oc not in _NO_TRAFFIC and not oc.endswith("-done"):
+                if oc in ("dynamic-slice", "gather", "slice"):
+                    tr = 2 * out_bytes                  # read slice + write
+                elif oc in ("dynamic-update-slice", "scatter"):
+                    ub = _update_bytes(op, c)
+                    tr = 2 * (ub if ub is not None else out_bytes)
+                elif oc == "fusion":
+                    callee = re.search(r"calls=%([\w.\-]+)", op.rest)
+                    fc = comps.get(callee.group(1)) if callee else None
+                    _dus_ops = ("dynamic-update-slice", "scatter")
+                    root_dus = False
+                    dus_op = None
+                    if fc is not None:
+                        has_dus = [o for o in fc.ops if o.opcode in _dus_ops]
+                        if has_dus and all(
+                                o.opcode in _TRANSFORM_OPS
+                                or o.opcode in _dus_ops for o in fc.ops):
+                            root_dus = True      # in-place update fusion
+                            dus_op = has_dus[0]
+                        elif fc.root is not None and \
+                                fc.root.opcode in _dus_ops:
+                            root_dus = True
+                            dus_op = fc.root
+                    transform_only = (fc is not None and all(
+                        o.opcode in _TRANSFORM_OPS for o in fc.ops))
+                    eff = (_fusion_eff_cache.get(fc.name)
+                           if fc is not None else None)
+                    if fc is not None and eff is None:
+                        eff = _fusion_param_effective_bytes(fc)
+                        _fusion_eff_cache[fc.name] = eff
+                    in_bytes, biggest = 0, 0
+                    opnames = _OPERAND_RE.findall(
+                        op.rest.split(", calls=")[0])
+                    for i, onm in enumerate(opnames):
+                        t = c.symbols.get(onm)
+                        if not t:
+                            continue
+                        b = _type_bytes(t)
+                        if eff is not None and i in eff:
+                            b = min(b, eff[i])
+                        in_bytes += b
+                        biggest = max(biggest, b)
+                    if root_dus:
+                        ub = (_update_bytes(dus_op, fc)
+                              if dus_op is not None else None)
+                        tr = in_bytes + (ub or 0)
+                    elif transform_only:
+                        # dtype/layout-transform fusion: fuses into its
+                        # consumer on TPU; count the source read only
+                        tr = in_bytes
+                    else:
+                        tr = out_bytes + in_bytes
+                else:
+                    in_bytes = 0
+                    for om in _OPERAND_RE.finditer(
+                            op.rest.split(" calls=")[0].split(" body=")[0]):
+                        t = c.symbols.get(om.group(1))
+                        if t:
+                            in_bytes += _type_bytes(t)
+                    tr = out_bytes + in_bytes
+                a.traffic += tr
+                a.tag(op, tr, 0.0)
+            # ---- calls
+            if oc == "while":
+                trip = 1
+                tm = _TRIP_RE.search(op.rest)
+                if tm:
+                    trip = int(tm.group(1))
+                for attr in ("body", "condition"):
+                    cm = re.search(attr + r"=%([\w.\-]+)", op.rest)
+                    if cm:
+                        a.add(analyze(cm.group(1), control), trip)
+            elif oc == "fusion":
+                cm = re.search(r"calls=%([\w.\-]+)", op.rest)
+                if cm:
+                    a.add(analyze(cm.group(1), False), 1)
+            elif oc == "conditional":
+                for cm in re.finditer(r"%([\w.\-]+)", op.rest):
+                    if cm.group(1) in comps and cm.group(1) not in fused:
+                        a.add(analyze(cm.group(1), control), 1)
+            elif oc in ("call", "async-start"):
+                cm = re.search(r"to_apply=%([\w.\-]+)", op.rest)
+                if cm:
+                    a.add(analyze(cm.group(1), control), 1)
+        return a
+
+    if entry is None:
+        return {"flops": 0.0, "traffic_bytes": 0.0, "collectives": {},
+                "top_traffic": [], "top_flops": []}
+    a = analyze(entry.name, True)
+    top_t = sorted(a.by_tag.items(), key=lambda kv: -kv[1][0])[:20]
+    top_f = sorted(a.by_tag.items(), key=lambda kv: -kv[1][1])[:20]
+    return {"flops": a.flops, "traffic_bytes": a.traffic,
+            "collectives": {k: dict(v) for k, v in a.colls.items()},
+            "top_traffic": [(k, v[0]) for k, v in top_t],
+            "top_flops": [(k, v[1]) for k, v in top_f]}
+
+
+# ------------------------------------------------------------------ roofline
+def roofline(flops_pd: float, bytes_pd: float, coll_wire_pd: float,
+             model_flops_global: float, n_chips: int) -> Dict[str, float]:
+    compute_s = flops_pd / PEAK_FLOPS
+    memory_s = bytes_pd / HBM_BW
+    coll_s = coll_wire_pd / ICI_BW
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", coll_s), key=lambda t: t[1])[0]
+    step_s = max(compute_s, memory_s, coll_s)
+    hlo_flops_global = flops_pd * n_chips
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": coll_s,
+        "dominant": dominant,
+        "bound_step_s": step_s,
+        "model_flops": model_flops_global,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_flop_ratio": (model_flops_global / hlo_flops_global
+                              if hlo_flops_global else 0.0),
+        "mfu_bound": (model_flops_global / (n_chips * PEAK_FLOPS) / step_s
+                      if step_s else 0.0),
+    }
+
+
+def count_hlo_ops(hlo_text: str, names: Tuple[str, ...]) -> Dict[str, int]:
+    c = {n: 0 for n in names}
+    for line in hlo_text.splitlines():
+        for n in names:
+            if f" {n}(" in line or f" {n}-start(" in line:
+                c[n] += 1
+    return c
+
+
+# legacy shim (benchmarks import collective_stats)
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    return analyze_hlo(hlo_text)["collectives"]

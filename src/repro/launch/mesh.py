@@ -1,0 +1,24 @@
+"""Production mesh builders (pure functions — importing never touches jax
+device state; the dry-run sets XLA_FLAGS before any jax import)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def make_local_mesh(axes=("data", "model")):
+    """1-device mesh with production axis names (CPU tests/smokes)."""
+    return jax.make_mesh((1,) * len(axes), tuple(axes))
+
+
+def make_pipeline_mesh(n_stages: int = 4):
+    return jax.make_mesh((n_stages,), ("stage",))

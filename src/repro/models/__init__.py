@@ -1,0 +1,2 @@
+from .config import ModelConfig  # noqa: F401
+from . import attention, blocks, lm, layers, mamba, mla, moe  # noqa: F401

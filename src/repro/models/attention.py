@@ -1,0 +1,293 @@
+"""GQA attention: training forward, prefill, and one-token decode w/ KV cache.
+
+Supports the assigned-arch knobs: GQA group sizes (kv=1 MQA .. kv=H MHA), QKV
+bias (qwen2.5), qk-norm (qwen3), sliding window, prefix-LM bidirectional
+masks (paligemma), cross attention (whisper), RoPE or learned positions.
+
+Masks are *specs*, not tensors: long sequences run a flash-style
+online-softmax over (q-tile × kv-tile) pairs with tile masks built from
+iotas — the [S,T] mask and the [.., S, T] logits never materialize in HBM
+(a 32k prefill would otherwise need a 1 GiB mask and TB-scale logits). The
+inner tile body is ``jax.checkpoint``-ed so backward recomputes tile
+probabilities flash-style instead of stashing them.
+
+Decode sharding note (DESIGN.md §5): when ``n_kv_heads`` doesn't divide the
+model axis, the KV cache shards its *sequence* dim instead; the plain einsum
+decode below lets XLA turn that into flash-decoding style partial-softmax
+collectives automatically.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import Params, dense_init, norm_params, rms_norm, rope_apply, rope_freqs
+
+NEG = -1e30
+FLASH_THRESH = 2048 * 2048       # S*T above this -> tiled path
+Q_CHUNK = 1024
+KV_CHUNK = 1024
+
+
+class MaskSpec(NamedTuple):
+    kind: str = "causal"             # causal | full
+    window: int = 0                  # 0 = unlimited
+    prefix_len: int = 0              # bidirectional prefix (PaliGemma)
+
+    def tile(self, qi, kj):
+        """Boolean tile mask from absolute indices qi [qc], kj [kc]."""
+        if self.kind == "full":
+            m = jnp.ones((qi.shape[0], kj.shape[0]), bool)
+        else:
+            m = kj[None, :] <= qi[:, None]
+            if self.window:
+                m &= kj[None, :] > (qi[:, None] - self.window)
+            if self.prefix_len:
+                m |= kj[None, :] < self.prefix_len
+        return m
+
+
+CAUSAL = MaskSpec("causal")
+FULL = MaskSpec("full")
+
+
+def proj_out(flat, wo):
+    """[B,S,H*hv] x wo[H,hv,d] -> [B,S,d]."""
+    B, S = flat.shape[:2]
+    H, hv, d = wo.shape
+    return jnp.einsum("bsnh,nhd->bsd", flat.reshape(B, S, H, hv), wo)
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray  # [B, S_max, n_kv, hd]
+    v: jnp.ndarray  # [B, S_max, n_kv, hd]
+
+
+def attn_params(key, cfg: ModelConfig, dtype=None) -> Params:
+    dtype = dtype or cfg.dtype
+    d, H, Hk, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 6)
+    p = {"wq": dense_init(ks[0], d, H, hd, dtype=dtype),
+         "wk": dense_init(ks[1], d, Hk, hd, dtype=dtype),
+         "wv": dense_init(ks[2], d, Hk, hd, dtype=dtype),
+         # [H, hd, d] so either heads or head_dim can shard (DESIGN.md §5)
+         "wo": (jax.random.truncated_normal(ks[3], -2.0, 2.0, (H, hd, d),
+                                            jnp.float32)
+                * ((H * hd) ** -0.5)).astype(dtype)}
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), dtype)
+        p["bk"] = jnp.zeros((Hk, hd), dtype)
+        p["bv"] = jnp.zeros((Hk, hd), dtype)
+    if cfg.qk_norm:
+        p["qnorm"] = norm_params(ks[4], hd, "rms", dtype)
+        p["knorm"] = norm_params(ks[5], hd, "rms", dtype)
+    return p
+
+
+def _qkv(p: Params, cfg: ModelConfig, x, positions):
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"])
+    k = jnp.einsum("bsd,dnh->bsnh", x, p["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["qnorm"]["w"], cfg.norm_eps)
+        k = rms_norm(k, p["knorm"]["w"], cfg.norm_eps)
+    if cfg.pos == "rope" and positions is not None:
+        sin, cos = rope_freqs(positions, cfg.hd, cfg.rope_theta)
+        q = rope_apply(q, sin, cos)
+        k = rope_apply(k, sin, cos)
+    return q, k, v
+
+
+# ------------------------------------------------------------------ sdpa
+def sdpa(q, k, v, mask: Optional[MaskSpec], n_rep: int,
+         scale: Optional[float] = None):
+    """q [B,S,H,hd], k/v [B,T,Hk,hd] -> [B,S,H*hd]. mask=None means full.
+
+    Dispatch: small sequences use the exact single-softmax einsum; long
+    sequences use the scan-tiled online softmax; on a real TPU backend the
+    Pallas fused kernel takes the long path instead (tiles stay in VMEM —
+    the scan path's tile logits round-trip HBM, which §Roofline shows
+    dominating 32k-prefill memory terms).
+    """
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    mask = mask or FULL
+    if S * T > FLASH_THRESH:
+        if jax.default_backend() == "tpu":
+            from repro.kernels.flash_attention.ops import flash_sdpa
+            return flash_sdpa(q, k, v, mask, n_rep, scale or hd ** -0.5)
+        return _sdpa_flash(q, k, v, mask, n_rep, scale)
+    return _sdpa_small(q, k, v, mask, n_rep, scale)
+
+
+def _sdpa_small(q, k, v, mask: MaskSpec, n_rep: int, scale=None):
+    B, S, H, hd = q.shape
+    T, Hk = k.shape[1], k.shape[2]
+    hv = v.shape[-1]
+    scale = scale or hd ** -0.5
+    qg = q.reshape(B, S, Hk, n_rep, hd)
+    logits = jnp.einsum("bskrh,btkh->bkrst", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    m = mask.tile(jnp.arange(S), jnp.arange(T))
+    logits = jnp.where(m[None, None, None], logits, NEG)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkrst,btkh->bskrh", w.astype(v.dtype), v)
+    return out.reshape(B, S, H * hv)
+
+
+def _sdpa_flash(q, k, v, mask: MaskSpec, n_rep: int, scale=None,
+                q_chunk: int = Q_CHUNK, kv_chunk: int = KV_CHUNK):
+    """Online-softmax tiling; [S,T] logits never materialize."""
+    B, S, H, hd = q.shape
+    T, Hk = k.shape[1], k.shape[2]
+    hv = v.shape[-1]
+    scale = scale or hd ** -0.5
+    qc = min(q_chunk, S)
+    kc = min(kv_chunk, T)
+    nq, nk = -(-S // qc), -(-T // kc)
+    Sp, Tp = nq * qc, nk * kc
+    qg = jnp.pad(q, [(0, 0), (0, Sp - S), (0, 0), (0, 0)])
+    kg = jnp.pad(k, [(0, 0), (0, Tp - T), (0, 0), (0, 0)])
+    vg = jnp.pad(v, [(0, 0), (0, Tp - T), (0, 0), (0, 0)])
+    qg = qg.reshape(B, nq, qc, Hk, n_rep, hd).transpose(1, 0, 3, 4, 2, 5)
+    kg = kg.reshape(B, nk, kc, Hk, hd).transpose(1, 0, 3, 2, 4)
+    vg = vg.reshape(B, nk, kc, Hk, hv).transpose(1, 0, 3, 2, 4)
+    # qg [nq, B, Hk, rep, qc, hd]; kg/vg [nk, B, Hk, kc, hd]
+
+    def q_tile(_, qi_blk):
+        qt, iq = qi_blk                      # [B,Hk,rep,qc,hd], scalar
+        qidx = iq * qc + jnp.arange(qc)
+
+        @jax.checkpoint
+        def kv_tile(carry, kv_blk):
+            m_run, l_run, acc = carry
+            kt, vt, jk = kv_blk
+            kidx = jk * kc + jnp.arange(kc)
+            s = jnp.einsum("bkrqh,bkch->bkrqc", qt, kt,
+                           preferred_element_type=jnp.float32) * scale
+            tm = mask.tile(qidx, kidx) & (kidx < T)[None, :]
+            s = jnp.where(tm[None, None, None], s, NEG)
+            m_new = jnp.maximum(m_run, s.max(-1))
+            p = jnp.where(tm[None, None, None],
+                          jnp.exp(s - m_new[..., None]), 0.0)
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkrqc,bkch->bkrqh", p.astype(vt.dtype), vt
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hk, n_rep, qc), NEG, jnp.float32)
+        l0 = jnp.zeros((B, Hk, n_rep, qc), jnp.float32)
+        a0 = jnp.zeros((B, Hk, n_rep, qc, hv), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            kv_tile, (m0, l0, a0),
+            (kg, vg, jnp.arange(nk, dtype=jnp.int32)))
+        out = acc / jnp.maximum(l_f, 1e-20)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, tiles = jax.lax.scan(q_tile, None,
+                            (qg, jnp.arange(nq, dtype=jnp.int32)))
+    # tiles [nq, B, Hk, rep, qc, hv] -> [B, S, H*hv]
+    out = tiles.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sp, Hk * n_rep * hv)
+    return out[:, :S]
+
+
+def causal_mask(S: int, T: int, offset: int = 0, window: int = 0,
+                prefix_len=None):
+    """Materialized bool mask (small/decode paths only)."""
+    qi = jnp.arange(S)[:, None] + offset
+    kj = jnp.arange(T)[None, :]
+    m = kj <= qi
+    if window:
+        m &= kj > qi - window
+    if prefix_len is not None:
+        m |= kj < prefix_len
+    return m
+
+
+def attn_forward(p: Params, cfg: ModelConfig, x, positions,
+                 mask: Optional[MaskSpec]) -> jnp.ndarray:
+    """Training/prefill attention over the full sequence."""
+    q, k, v = _qkv(p, cfg, x, positions)
+    out = sdpa(q, k, v, mask, cfg.n_heads // cfg.n_kv_heads)
+    return proj_out(out, p["wo"])
+
+
+def attn_prefill(p: Params, cfg: ModelConfig, x, positions,
+                 mask: Optional[MaskSpec], cache_len: int,
+                 ) -> Tuple[jnp.ndarray, KVCache]:
+    """Prefill: run full attention AND return a KV cache padded to cache_len."""
+    q, k, v = _qkv(p, cfg, x, positions)
+    B, S = x.shape[:2]
+    out = sdpa(q, k, v, mask, cfg.n_heads // cfg.n_kv_heads)
+    pad = [(0, 0), (0, cache_len - S), (0, 0), (0, 0)]
+    return proj_out(out, p["wo"]), KVCache(
+        jnp.pad(k, pad).astype(jnp.bfloat16),
+        jnp.pad(v, pad).astype(jnp.bfloat16))
+
+
+def attn_decode(p: Params, cfg: ModelConfig, x, pos, cache: KVCache,
+                ) -> Tuple[jnp.ndarray, KVCache]:
+    """One-token decode. x [B,1,d]; pos int32 [B] absolute position."""
+    q, k, v = _qkv(p, cfg, x, pos[:, None])
+    B = x.shape[0]
+    S_max = cache.k.shape[1]
+    bidx = jnp.arange(B)
+    newk = cache.k.at[bidx, pos].set(k[:, 0].astype(cache.k.dtype))
+    newv = cache.v.at[bidx, pos].set(v[:, 0].astype(cache.v.dtype))
+    valid = jnp.arange(S_max)[None, :] <= pos[:, None]         # [B, S_max]
+    if cfg.window:
+        valid &= jnp.arange(S_max)[None, :] > (pos[:, None] - cfg.window)
+    Hk, n_rep = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    hd = cfg.hd
+    qg = q.reshape(B, Hk, n_rep, hd)
+    logits = jnp.einsum("bkrh,btkh->bkrt", qg, newk.astype(x.dtype),
+                        preferred_element_type=jnp.float32) * hd ** -0.5
+    logits = jnp.where(valid[:, None, None], logits, NEG)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkrt,btkh->bkrh", w.astype(x.dtype),
+                     newv.astype(x.dtype)).reshape(B, 1, Hk * n_rep * hd)
+    return proj_out(out, p["wo"]), KVCache(newk, newv)
+
+
+# ------------------------------------------------------------------ cross attn
+def cross_attn_params(key, cfg: ModelConfig, dtype=None) -> Params:
+    dtype = dtype or cfg.dtype
+    d, H, Hk, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    return {"wq": dense_init(ks[0], d, H, hd, dtype=dtype),
+            "wk": dense_init(ks[1], d, Hk, hd, dtype=dtype),
+            "wv": dense_init(ks[2], d, Hk, hd, dtype=dtype),
+            "wo": (jax.random.truncated_normal(ks[3], -2.0, 2.0, (H, hd, d),
+                                               jnp.float32)
+                   * ((H * hd) ** -0.5)).astype(dtype)}
+
+
+def cross_attn_forward(p: Params, cfg: ModelConfig, x, enc_kv) -> jnp.ndarray:
+    """x [B,S,d] queries; enc_kv = (k, v) precomputed from encoder output."""
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"])
+    k, v = enc_kv
+    out = sdpa(q, k.astype(x.dtype), v.astype(x.dtype), FULL,
+               cfg.n_heads // cfg.n_kv_heads)
+    return proj_out(out, p["wo"])
+
+
+def cross_kv(p: Params, enc_out) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    k = jnp.einsum("btd,dnh->btnh", enc_out, p["wk"])
+    v = jnp.einsum("btd,dnh->btnh", enc_out, p["wv"])
+    return k, v
+
+
+def init_kv_cache(cfg: ModelConfig, B: int, S_max: int, n_layers: int,
+                  dtype=jnp.bfloat16) -> KVCache:
+    shape = (n_layers, B, S_max, cfg.n_kv_heads, cfg.hd)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))

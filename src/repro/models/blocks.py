@@ -1,0 +1,203 @@
+"""Decoder/encoder block wiring for every architecture family.
+
+A block = pre-norm mixer + residual (+ pre-norm FFN + residual when the
+family has a separate FFN). Mixers: GQA attention, MLA, mamba1, mamba2.
+FFNs: dense MLP variants or MoE. All block params are plain dicts so stacked
+(scan-over-layers) initialization is just ``jax.vmap`` over keys.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as A
+from . import mamba as M
+from . import mla as MLA
+from . import moe as MOE
+from .config import ModelConfig
+from .layers import (Params, apply_norm, dense_init, mlp_apply, mlp_params,
+                     norm_params)
+
+
+def block_kinds(cfg: ModelConfig) -> Tuple[Tuple[str, int], ...]:
+    """Layer-segment plan: ((kind, n_layers), ...) scanned homogeneously."""
+    f = cfg.family
+    if f in ("dense", "vlm"):
+        return (("dense", cfg.n_layers),)
+    if f == "moe":
+        mixer = "mla" if cfg.attention == "mla" else "gqa"
+        segs = []
+        if cfg.n_dense_layers:
+            segs.append((f"{mixer}+mlp", cfg.n_dense_layers))
+        segs.append((f"{mixer}+moe", cfg.n_layers - cfg.n_dense_layers))
+        return tuple(segs)
+    if f == "ssm":
+        return ((f"mamba{cfg.ssm_version}", cfg.n_layers),)
+    if f == "hybrid":
+        return (("hybrid", cfg.n_layers),)   # assembled specially in lm.py
+    if f == "encdec":
+        return (("encdec", cfg.n_layers),)
+    raise ValueError(f)
+
+
+# ------------------------------------------------------------------ params
+def block_params(key, cfg: ModelConfig, kind: str) -> Params:
+    d, dtype = cfg.d_model, cfg.dtype
+    ks = jax.random.split(key, 4)
+    p: Params = {"ln1": norm_params(ks[0], d, cfg.norm, dtype)}
+    if kind in ("dense", "gqa+mlp", "gqa+moe"):
+        p["attn"] = A.attn_params(ks[1], cfg)
+    elif kind in ("mla+mlp", "mla+moe"):
+        p["attn"] = MLA.mla_params(ks[1], cfg)
+    elif kind == "mamba1":
+        p["mixer"] = M.mamba1_params(ks[1], cfg)
+        return p
+    elif kind == "mamba2":
+        p["mixer"] = M.mamba2_params(ks[1], cfg)
+        return p
+    p["ln2"] = norm_params(ks[2], d, cfg.norm, dtype)
+    if kind.endswith("+moe"):
+        p["moe"] = MOE.moe_params(ks[3], cfg)
+    elif kind in ("dense", "gqa+mlp", "mla+mlp"):
+        ff = cfg.d_ff_dense if (kind == "mla+mlp" and cfg.d_ff_dense) else cfg.d_ff
+        p["mlp"] = mlp_params(ks[3], d, ff, cfg.mlp, dtype)
+    return p
+
+
+def enc_block_params(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    d, dtype = cfg.d_model, cfg.dtype
+    return {"ln1": norm_params(ks[0], d, cfg.norm, dtype),
+            "attn": A.attn_params(ks[1], cfg),
+            "ln2": norm_params(ks[2], d, cfg.norm, dtype),
+            "mlp": mlp_params(ks[3], d, cfg.d_ff, cfg.mlp, dtype)}
+
+
+def dec_block_params(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 6)
+    d, dtype = cfg.d_model, cfg.dtype
+    return {"ln1": norm_params(ks[0], d, cfg.norm, dtype),
+            "attn": A.attn_params(ks[1], cfg),
+            "lnx": norm_params(ks[2], d, cfg.norm, dtype),
+            "cross": A.cross_attn_params(ks[3], cfg),
+            "ln2": norm_params(ks[4], d, cfg.norm, dtype),
+            "mlp": mlp_params(ks[5], d, cfg.d_ff, cfg.mlp, dtype)}
+
+
+# ------------------------------------------------------------------ forward
+def block_forward(p: Params, cfg: ModelConfig, kind: str, x, positions, mask,
+                  shard=lambda a, k: a):
+    """Training/prefill-compute path (no cache). Returns (x, aux_loss)."""
+    aux = jnp.float32(0.0)
+    h = apply_norm(x, p["ln1"], cfg.norm, cfg.norm_eps)
+    if kind in ("dense", "gqa+mlp", "gqa+moe"):
+        x = x + shard(A.attn_forward(p["attn"], cfg, h, positions, mask), "bsd")
+    elif kind in ("mla+mlp", "mla+moe"):
+        x = x + shard(MLA.mla_forward(p["attn"], cfg, h, positions, mask), "bsd")
+    elif kind == "mamba1":
+        y, _ = M.mamba1_forward(p["mixer"], cfg, h)
+        return x + shard(y, "bsd"), aux
+    elif kind == "mamba2":
+        y, _ = M.mamba2_forward(p["mixer"], cfg, h)
+        return x + shard(y, "bsd"), aux
+    h = apply_norm(x, p["ln2"], cfg.norm, cfg.norm_eps)
+    if "moe" in p:
+        y, aux = MOE.moe_apply(p["moe"], cfg, h, shard)
+        x = x + shard(y, "bsd")
+    else:
+        x = x + shard(mlp_apply(p["mlp"], h, cfg.mlp), "bsd")
+    return x, aux
+
+
+def block_prefill(p, cfg: ModelConfig, kind: str, x, positions, mask,
+                  cache_len: int, shard=lambda a, k: a):
+    """Like block_forward but also emits this layer's decode cache."""
+    h = apply_norm(x, p["ln1"], cfg.norm, cfg.norm_eps)
+    if kind.startswith("mla"):
+        y, cache = MLA.mla_prefill(p["attn"], cfg, h, positions, mask, cache_len)
+        x = x + shard(y, "bsd")
+    elif kind.startswith(("dense", "gqa")):
+        y, cache = A.attn_prefill(p["attn"], cfg, h, positions, mask, cache_len)
+        x = x + shard(y, "bsd")
+    elif kind == "mamba1":
+        y, cache = M.mamba1_forward(p["mixer"], cfg, h)
+        return x + shard(y, "bsd"), cache
+    elif kind == "mamba2":
+        y, cache = M.mamba2_forward(p["mixer"], cfg, h)
+        return x + shard(y, "bsd"), cache
+    h = apply_norm(x, p["ln2"], cfg.norm, cfg.norm_eps)
+    if "moe" in p:
+        y, _ = MOE.moe_apply(p["moe"], cfg, h, shard)
+        x = x + shard(y, "bsd")
+    else:
+        x = x + shard(mlp_apply(p["mlp"], h, cfg.mlp), "bsd")
+    return x, cache
+
+
+def block_decode(p, cfg: ModelConfig, kind: str, x, pos, cache,
+                 shard=lambda a, k: a):
+    """One-token step. cache is this layer's cache slice; returns (x, cache')."""
+    h = apply_norm(x, p["ln1"], cfg.norm, cfg.norm_eps)
+    if kind.startswith("mla"):
+        y, cache = MLA.mla_decode(p["attn"], cfg, h, pos, cache)
+        x = x + y
+    elif kind.startswith(("dense", "gqa")):
+        y, cache = A.attn_decode(p["attn"], cfg, h, pos, cache)
+        x = x + y
+    elif kind == "mamba1":
+        y, cache = M.mamba1_decode(p["mixer"], cfg, h, cache)
+        return x + y, cache
+    elif kind == "mamba2":
+        y, cache = M.mamba2_decode(p["mixer"], cfg, h, cache)
+        return x + y, cache
+    h = apply_norm(x, p["ln2"], cfg.norm, cfg.norm_eps)
+    if "moe" in p:
+        y, _ = MOE.moe_apply(p["moe"], cfg, h, shard)
+        x = x + y
+    else:
+        x = x + mlp_apply(p["mlp"], h, cfg.mlp)
+    return x, cache
+
+
+# ------------------------------------------------------------- zamba2 shared
+def shared_block_params(key, cfg: ModelConfig) -> Params:
+    """The single shared attention+MLP block (zamba2)."""
+    return block_params(key, cfg, "dense")
+
+
+def shared_lora_params(key, cfg: ModelConfig) -> Params:
+    """Per-occurrence LoRA adapters on the shared block's wq (simplified
+    faithful: zamba2 attaches LoRA to the shared block per occurrence)."""
+    r = cfg.shared_lora_rank
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    k1, k2 = jax.random.split(key)
+    return {"qa": dense_init(k1, d, r, dtype=cfg.dtype),
+            "qb": jnp.zeros((r, H * hd), cfg.dtype)}
+
+
+def shared_block_forward(p: Params, lora: Optional[Params], cfg: ModelConfig,
+                         x, positions, mask, shard=lambda a, k: a):
+    h = apply_norm(x, p["ln1"], cfg.norm, cfg.norm_eps)
+    y = A.attn_forward(p["attn"], cfg, h, positions, mask)
+    if lora is not None:
+        B, S, d = h.shape
+        # LoRA correction joins through the output projection
+        dq = (h @ lora["qa"]) @ lora["qb"]
+        y = y + A.proj_out(dq, p["attn"]["wo"])
+    x = x + shard(y, "bsd")
+    h = apply_norm(x, p["ln2"], cfg.norm, cfg.norm_eps)
+    return x + shard(mlp_apply(p["mlp"], h, cfg.mlp), "bsd")
+
+
+def shared_block_decode(p, lora, cfg: ModelConfig, x, pos, cache):
+    h = apply_norm(x, p["ln1"], cfg.norm, cfg.norm_eps)
+    y, cache = A.attn_decode(p["attn"], cfg, h, pos, cache)
+    if lora is not None:
+        B = h.shape[0]
+        dq = (h @ lora["qa"]) @ lora["qb"]     # h is [B,1,d] in decode
+        y = y + A.proj_out(dq, p["attn"]["wo"])
+    x = x + y
+    h = apply_norm(x, p["ln2"], cfg.norm, cfg.norm_eps)
+    return x + mlp_apply(p["mlp"], h, cfg.mlp), cache

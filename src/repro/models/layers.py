@@ -1,0 +1,118 @@
+"""Shared layer primitives: inits, norms, MLPs, rotary embeddings.
+
+Parameters are plain nested dicts of jnp arrays; every init function is pure
+(usable under ``jax.eval_shape`` so the dry-run never materializes weights).
+Compute runs in bfloat16 with float32 softmax/norm accumulations.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, object]
+
+
+def dense_init(key, d_in: int, *dims, dtype, scale: float = 1.0):
+    """Truncated-normal fan-in init, shape [d_in, *dims]."""
+    shape = (d_in,) + dims
+    std = scale / (d_in ** 0.5)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (vocab, d), jnp.float32)
+            * 0.02).astype(dtype)
+
+
+# ------------------------------------------------------------------ norms
+def rms_norm(x, w, eps: float):
+    h = x.astype(jnp.float32)
+    h = h * jax.lax.rsqrt(jnp.mean(h * h, axis=-1, keepdims=True) + eps)
+    return (h * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, w, b, eps: float):
+    h = x.astype(jnp.float32)
+    mu = jnp.mean(h, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(h - mu), axis=-1, keepdims=True)
+    h = (h - mu) * jax.lax.rsqrt(var + eps)
+    return (h * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_params(key, d: int, kind: str, dtype) -> Params:
+    if kind == "rms":
+        return {"w": jnp.zeros((d,), dtype)}
+    return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def apply_norm(x, p: Params, kind: str, eps: float):
+    if kind == "rms":
+        return rms_norm(x, p["w"], eps)
+    return layer_norm(x, p["w"], p["b"], eps)
+
+
+# ------------------------------------------------------------------ MLPs
+def mlp_params(key, d: int, ff: int, kind: str, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {"wi": dense_init(k1, d, ff, dtype=dtype),
+                "wg": dense_init(k2, d, ff, dtype=dtype),
+                "wo": dense_init(k3, ff, d, dtype=dtype)}
+    return {"wi": dense_init(k1, d, ff, dtype=dtype),
+            "wo": dense_init(k2, ff, d, dtype=dtype)}
+
+
+def mlp_apply(p: Params, x, kind: str):
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    elif kind == "geglu":
+        h = jax.nn.gelu(x @ p["wg"], approximate=True) * (x @ p["wi"])
+    elif kind == "relu2":   # nemotron squared-ReLU
+        h = jnp.square(jax.nn.relu(x @ p["wi"]))
+    else:                   # gelu (whisper)
+        h = jax.nn.gelu(x @ p["wi"], approximate=True)
+    return h @ p["wo"]
+
+
+# ------------------------------------------------------------------ rotary
+def rope_freqs(positions, head_dim: int, theta: float):
+    """positions [...,] -> (sin, cos) each [..., head_dim/2] float32."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def rope_apply(x, sin, cos):
+    """x [..., S, n, head_dim]; sin/cos [..., S, head_dim/2] (broadcast on n)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    sin = sin[..., None, :]
+    cos = cos[..., None, :]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([x1f * cos - x2f * sin,
+                            x2f * cos + x1f * sin], axis=-1).astype(x.dtype)
+
+
+def learned_pos_params(key, max_pos: int, d: int, dtype) -> Params:
+    return {"pos": dense_init(key, max_pos, d, dtype=dtype)}
+
+
+# ------------------------------------------------------------------ loss
+def softmax_xent(logits, labels, mask=None):
+    """Cross entropy with f32 logsumexp; logits may be vocab-sharded.
+
+    logits [..., V] (any float dtype), labels int32 [...]. Returns mean loss.
+    """
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    lab = jnp.take_along_axis(lf, labels[..., None].astype(jnp.int32),
+                              axis=-1)[..., 0]
+    nll = lse - lab
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,429 @@
+"""Model assembly: init / forward / prefill / decode for every family.
+
+Layer stacks are scanned (``jax.lax.scan`` over stacked params) so the HLO —
+and therefore dry-run compile time on 512 virtual devices — stays small and
+shape-static. ``shard`` is an injected activation-constraint hook
+(parallel.sharding.shard); model code never touches the mesh directly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as A
+from . import blocks as BLK
+from . import mamba as M
+from . import mla as MLA
+from .config import ModelConfig
+from .layers import Params, apply_norm, dense_init, embed_init, norm_params
+
+NOSHARD = lambda a, k: a
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+# ===================================================================== init
+def init_params(cfg: ModelConfig, key) -> Params:
+    keys = jax.random.split(key, 16)
+    d, dtype = cfg.d_model, cfg.dtype
+    p: Params = {"embed": embed_init(keys[0], cfg.vocab, d, dtype),
+                 "final_norm": norm_params(keys[1], d, cfg.norm, dtype)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(keys[2], d, cfg.vocab, dtype=dtype)
+
+    if cfg.family == "hybrid":
+        pat = cfg.hybrid_pattern()
+        n_sh = pat.count("a")
+        per = cfg.shared_attn_period
+        n_grp, grp_m = n_sh, per - 1
+        n_tail = cfg.n_layers - n_sh * per
+        km = jax.random.split(keys[3], n_grp * grp_m).reshape(n_grp, grp_m, 2)
+        p["mamba_grp"] = jax.vmap(jax.vmap(
+            lambda k: BLK.block_params(k, cfg, "mamba2")))(km)
+        if n_tail:
+            kt = jax.random.split(keys[4], n_tail)
+            p["mamba_tail"] = jax.vmap(
+                lambda k: BLK.block_params(k, cfg, "mamba2"))(kt)
+        p["shared"] = BLK.shared_block_params(keys[5], cfg)
+        if cfg.shared_lora_rank:
+            kl = jax.random.split(keys[6], n_grp)
+            p["lora"] = jax.vmap(
+                lambda k: BLK.shared_lora_params(k, cfg))(kl)
+        return p
+
+    if cfg.family == "encdec":
+        ke = jax.random.split(keys[3], cfg.n_enc_layers)
+        kd = jax.random.split(keys[4], cfg.n_layers)
+        p["enc"] = {
+            "proj": dense_init(keys[5], cfg.frontend_dim, d, dtype=dtype),
+            "pos": dense_init(keys[6], cfg.enc_seq, d, dtype=dtype) * 0.02,
+            "blocks": jax.vmap(lambda k: BLK.enc_block_params(k, cfg))(ke),
+            "ln_f": norm_params(keys[7], d, cfg.norm, dtype),
+        }
+        p["dec_pos"] = dense_init(keys[8], cfg.enc_seq, d, dtype=dtype) * 0.02
+        p["dec_blocks"] = jax.vmap(lambda k: BLK.dec_block_params(k, cfg))(kd)
+        return p
+
+    if cfg.family == "vlm":
+        p["proj"] = dense_init(keys[9], cfg.frontend_dim, d, dtype=dtype)
+
+    for i, (kind, n) in enumerate(BLK.block_kinds(cfg)):
+        kk = jax.random.split(keys[10 + i], n)
+        p[f"seg{i}"] = jax.vmap(
+            lambda k: BLK.block_params(k, cfg, kind))(kk)
+
+    if cfg.mtp:
+        kind = BLK.block_kinds(cfg)[-1][0]
+        p["mtp"] = {
+            "proj": dense_init(keys[14], 2 * d, d, dtype=dtype),
+            "norm_h": norm_params(keys[15], d, cfg.norm, dtype),
+            "norm_e": norm_params(keys[15], d, cfg.norm, dtype),
+            "block": BLK.block_params(keys[13], cfg, kind),
+        }
+    return p
+
+
+def unembed(p: Params, cfg: ModelConfig, x, shard=NOSHARD):
+    if cfg.tie_embeddings:
+        logits = x @ p["embed"].T
+    else:
+        logits = x @ p["lm_head"]
+    return shard(logits, "bsv")
+
+
+# ===================================================================== train
+def forward(p: Params, cfg: ModelConfig, batch: Dict, shard=NOSHARD,
+            ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """-> (logits [B,S,V], aux_loss, hidden [B,S,d])."""
+    if cfg.family == "encdec":
+        return _forward_encdec(p, cfg, batch, shard)
+
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = shard(p["embed"][tokens], "bsd")
+    prefix_len = None
+    if cfg.family == "vlm":
+        xp = batch["patches"].astype(x.dtype) @ p["proj"]
+        x = jnp.concatenate([shard(xp, "bsd"), x], axis=1)
+        prefix_len = cfg.n_patches
+        S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    mask = A.MaskSpec("causal", cfg.window, prefix_len or 0)
+    aux = jnp.float32(0.0)
+
+    if cfg.family == "hybrid":
+        x = _hybrid_forward(p, cfg, x, positions, mask, shard)
+    else:
+        for i, (kind, n) in enumerate(BLK.block_kinds(cfg)):
+            def body(h, pl, _kind=kind):
+                h2, a = BLK.block_forward(pl, cfg, _kind, h, positions, mask,
+                                          shard)
+                return h2, a
+            body = _maybe_remat(body, cfg)
+            x, auxs = jax.lax.scan(body, x, p[f"seg{i}"])
+            aux = aux + auxs.sum()
+
+    h = apply_norm(x, p["final_norm"], cfg.norm, cfg.norm_eps)
+    logits = unembed(p, cfg, h, shard)
+    return logits, aux, h
+
+
+def _hybrid_forward(p, cfg, x, positions, mask, shard):
+    def mbody(h, pl):
+        h2, _ = BLK.block_forward(pl, cfg, "mamba2", h, positions, mask, shard)
+        return h2, None
+
+    lora = p.get("lora")
+    n_grp = p["mamba_grp"]["ln1"]["w"].shape[0]
+
+    def group(h, xs):
+        mgrp, lg = xs
+        h, _ = jax.lax.scan(_maybe_remat(mbody, cfg), h, mgrp)
+        h = BLK.shared_block_forward(p["shared"],
+                                     lg if lora is not None else None,
+                                     cfg, h, positions, mask, shard)
+        return h, None
+
+    lg_xs = lora if lora is not None else jnp.zeros((n_grp, 0))
+    x, _ = jax.lax.scan(group, x, (p["mamba_grp"], lg_xs))
+    if "mamba_tail" in p:
+        x, _ = jax.lax.scan(_maybe_remat(mbody, cfg), x, p["mamba_tail"])
+    return x
+
+
+def _forward_encdec(p, cfg: ModelConfig, batch, shard):
+    enc_out = encode(p, cfg, batch["frames"], shard)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = shard(p["embed"][tokens], "bsd") + p["dec_pos"][:S]
+    positions = None
+    mask = A.MaskSpec("causal")
+
+    def body(h, pl):
+        g = apply_norm(h, pl["ln1"], cfg.norm, cfg.norm_eps)
+        h = h + shard(A.attn_forward(pl["attn"], cfg, g, positions, mask),
+                      "bsd")
+        g = apply_norm(h, pl["lnx"], cfg.norm, cfg.norm_eps)
+        kv = A.cross_kv(pl["cross"], enc_out)
+        h = h + shard(A.cross_attn_forward(pl["cross"], cfg, g, kv), "bsd")
+        g = apply_norm(h, pl["ln2"], cfg.norm, cfg.norm_eps)
+        from .layers import mlp_apply
+        h = h + shard(mlp_apply(pl["mlp"], g, cfg.mlp), "bsd")
+        return h, None
+
+    x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, p["dec_blocks"])
+    h = apply_norm(x, p["final_norm"], cfg.norm, cfg.norm_eps)
+    return unembed(p, cfg, h, shard), jnp.float32(0.0), h
+
+
+def encode(p, cfg: ModelConfig, frames, shard=NOSHARD):
+    """Whisper encoder over stub frame embeddings [B, T, frontend_dim]."""
+    e = p["enc"]
+    T = frames.shape[1]
+    x = shard(frames.astype(cfg.dtype) @ e["proj"], "bsd") + e["pos"][:T]
+
+    def body(h, pl):
+        g = apply_norm(h, pl["ln1"], cfg.norm, cfg.norm_eps)
+        h = h + shard(A.attn_forward(pl["attn"], cfg, g, None, None), "bsd")
+        g = apply_norm(h, pl["ln2"], cfg.norm, cfg.norm_eps)
+        from .layers import mlp_apply
+        h = h + shard(mlp_apply(pl["mlp"], g, cfg.mlp), "bsd")
+        return h, None
+
+    x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, e["blocks"])
+    return apply_norm(x, e["ln_f"], cfg.norm, cfg.norm_eps)
+
+
+def mtp_logits(p: Params, cfg: ModelConfig, hidden, tokens, shard=NOSHARD):
+    """DeepSeek multi-token-prediction head: predict token t+2 from the main
+    trunk's hidden at t combined with the embedding of token t+1."""
+    mtp = p["mtp"]
+    B, S = tokens.shape
+    nxt = jnp.concatenate([tokens[:, 1:], tokens[:, -1:]], axis=1)
+    he = apply_norm(p["embed"][nxt], mtp["norm_e"], cfg.norm, cfg.norm_eps)
+    hh = apply_norm(hidden, mtp["norm_h"], cfg.norm, cfg.norm_eps)
+    x = jnp.concatenate([hh, he], axis=-1) @ mtp["proj"]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    mask = A.MaskSpec("causal")
+    kind = BLK.block_kinds(cfg)[-1][0]
+    x, _ = BLK.block_forward(mtp["block"], cfg, kind, x, positions, mask,
+                             shard)
+    x = apply_norm(x, p["final_norm"], cfg.norm, cfg.norm_eps)
+    return unembed(p, cfg, x, shard)
+
+
+# ===================================================================== caches
+def init_cache(cfg: ModelConfig, B: int, S_max: int):
+    if cfg.family == "hybrid":
+        per = cfg.shared_attn_period
+        n_sh = cfg.n_layers // per
+        grp_m = per - 1
+        n_tail = cfg.n_layers - n_sh * per
+        grp = M.init_mamba_state(cfg, B, n_sh * grp_m)
+        grp = jax.tree_util.tree_map(
+            lambda a: a.reshape((n_sh, grp_m) + a.shape[1:]), grp)
+        cache = {"grp": grp,
+                 "attn": A.init_kv_cache(cfg, B, S_max, n_sh)}
+        if n_tail:
+            cache["tail"] = M.init_mamba_state(cfg, B, n_tail)
+        return cache
+    if cfg.family == "ssm":
+        return M.init_mamba_state(cfg, B, cfg.n_layers)
+    if cfg.family == "encdec":
+        return {"self": A.init_kv_cache(cfg, B, S_max, cfg.n_layers),
+                "cross_k": jnp.zeros((cfg.n_layers, B, cfg.enc_seq,
+                                      cfg.n_kv_heads, cfg.hd), jnp.bfloat16),
+                "cross_v": jnp.zeros((cfg.n_layers, B, cfg.enc_seq,
+                                      cfg.n_kv_heads, cfg.hd), jnp.bfloat16)}
+    if cfg.attention == "mla":
+        segs = BLK.block_kinds(cfg)
+        L = cfg.n_layers
+        return MLA.MLACache(
+            jnp.zeros((L, B, S_max, cfg.kv_lora_rank), jnp.bfloat16),
+            jnp.zeros((L, B, S_max, cfg.qk_rope_head_dim), jnp.bfloat16))
+    return A.init_kv_cache(cfg, B, S_max, cfg.n_layers)
+
+
+# ===================================================================== decode
+def decode_step(p: Params, cfg: ModelConfig, tokens, pos, cache,
+                shard=NOSHARD, enc_out=None):
+    """One new token for every sequence. tokens [B] int32, pos [B] int32.
+    Returns (logits [B, V], cache')."""
+    B = tokens.shape[0]
+    x = p["embed"][tokens][:, None, :]          # [B,1,d]
+
+    if cfg.family == "hybrid":
+        x, cache = _hybrid_decode(p, cfg, x, pos, cache)
+    elif cfg.family == "encdec":
+        x = x + jnp.take(p["dec_pos"], pos, axis=0)[:, None]
+        def body(h, xs):
+            pl, ck, cv, xk, xv = xs
+            g = apply_norm(h, pl["ln1"], cfg.norm, cfg.norm_eps)
+            y, newc = A.attn_decode(pl["attn"], cfg, g, pos, A.KVCache(ck, cv))
+            h = h + y
+            g = apply_norm(h, pl["lnx"], cfg.norm, cfg.norm_eps)
+            h = h + A.cross_attn_forward(pl["cross"], cfg, g, (xk, xv))
+            g = apply_norm(h, pl["ln2"], cfg.norm, cfg.norm_eps)
+            from .layers import mlp_apply
+            h = h + mlp_apply(pl["mlp"], g, cfg.mlp)
+            return h, (newc.k, newc.v)
+        x, (nk, nv) = jax.lax.scan(
+            body, x, (p["dec_blocks"], cache["self"].k, cache["self"].v,
+                      cache["cross_k"], cache["cross_v"]))
+        cache = dict(cache, self=A.KVCache(nk, nv))
+    else:
+        layer_off = 0
+        new_caches = []
+        for i, (kind, n) in enumerate(BLK.block_kinds(cfg)):
+            seg_cache = jax.tree_util.tree_map(
+                lambda a: a[layer_off:layer_off + n], cache)
+            def body(h, xs, _kind=kind):
+                pl, c = xs
+                h2, c2 = BLK.block_decode(pl, cfg, _kind, h, pos, c, shard)
+                return h2, c2
+            x, newc = jax.lax.scan(body, x, (p[f"seg{i}"], seg_cache))
+            new_caches.append(newc)
+            layer_off += n
+        cache = jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *new_caches) \
+            if len(new_caches) > 1 else new_caches[0]
+
+    h = apply_norm(x, p["final_norm"], cfg.norm, cfg.norm_eps)
+    logits = unembed(p, cfg, h, shard)[:, 0]
+    return logits, cache
+
+
+def _hybrid_decode(p, cfg, x, pos, cache):
+    def mbody(h, xs):
+        pl, c = xs
+        h2, c2 = BLK.block_decode(pl, cfg, "mamba2", h, pos, c)
+        return h2, c2
+
+    lora = p.get("lora")
+    n_grp = cache["attn"].k.shape[0]
+
+    def group(h, xs):
+        mgrp, cgrp, ck, cv, lg = xs
+        h, cgrp2 = jax.lax.scan(mbody, h, (mgrp, cgrp))
+        h, ac = BLK.shared_block_decode(p["shared"],
+                                        lg if lora is not None else None,
+                                        cfg, h, pos, A.KVCache(ck, cv))
+        return h, (cgrp2, ac.k, ac.v)
+
+    lg_xs = lora if lora is not None else jnp.zeros((n_grp, 0))
+    x, (grp2, nk, nv) = jax.lax.scan(
+        group, x, (p["mamba_grp"], cache["grp"], cache["attn"].k,
+                   cache["attn"].v, lg_xs))
+    out = {"grp": grp2, "attn": A.KVCache(nk, nv)}
+    if "tail" in cache:
+        x, tail2 = jax.lax.scan(mbody, x, (p["mamba_tail"], cache["tail"]))
+        out["tail"] = tail2
+    return x, out
+
+
+# ===================================================================== prefill
+def prefill(p: Params, cfg: ModelConfig, batch: Dict, S_max: int,
+            shard=NOSHARD):
+    """Process a full prompt; returns (last-token logits [B,V], cache).
+
+    Only the final position's logits are computed (serving practice — the
+    full [B,S,V] tensor never materializes).
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = shard(p["embed"][tokens], "bsd")
+    prefix_len = None
+    if cfg.family == "vlm":
+        xp = batch["patches"].astype(x.dtype) @ p["proj"]
+        x = jnp.concatenate([shard(xp, "bsd"), x], axis=1)
+        prefix_len = cfg.n_patches
+        S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    mask = A.MaskSpec("causal", cfg.window, prefix_len or 0)
+
+    if cfg.family == "encdec":
+        enc_out = encode(p, cfg, batch["frames"], shard)
+        def body(h, pl):
+            g = apply_norm(h, pl["ln1"], cfg.norm, cfg.norm_eps)
+            y, c = A.attn_prefill(pl["attn"], cfg, g, None, mask, S_max)
+            h = h + shard(y, "bsd")
+            g = apply_norm(h, pl["lnx"], cfg.norm, cfg.norm_eps)
+            kv = A.cross_kv(pl["cross"], enc_out)
+            h = h + shard(A.cross_attn_forward(pl["cross"], cfg, g, kv), "bsd")
+            g = apply_norm(h, pl["ln2"], cfg.norm, cfg.norm_eps)
+            from .layers import mlp_apply
+            h = h + shard(mlp_apply(pl["mlp"], g, cfg.mlp), "bsd")
+            return h, (c, kv)
+        x0 = x + p["dec_pos"][:S]
+        x, (c, kv) = jax.lax.scan(body, x0, p["dec_blocks"])
+        cache = {"self": c,
+                 "cross_k": kv[0].astype(jnp.bfloat16),
+                 "cross_v": kv[1].astype(jnp.bfloat16)}
+    elif cfg.family == "hybrid":
+        x, cache = _hybrid_prefill(p, cfg, x, positions, mask, S_max, shard)
+    elif cfg.family == "ssm":
+        def body(h, pl):
+            g = apply_norm(h, pl["ln1"], cfg.norm, cfg.norm_eps)
+            fwd = M.mamba1_forward if cfg.ssm_version == 1 else M.mamba2_forward
+            y, st = fwd(pl["mixer"], cfg, g)
+            return h + shard(y, "bsd"), st
+        x, cache = jax.lax.scan(body, x, p["seg0"])
+    else:
+        layer_off = 0
+        caches = []
+        for i, (kind, n) in enumerate(BLK.block_kinds(cfg)):
+            def body(h, pl, _kind=kind):
+                return BLK.block_prefill(pl, cfg, _kind, h, positions, mask,
+                                         S_max, shard)
+            x, c = jax.lax.scan(body, x, p[f"seg{i}"])
+            caches.append(c)
+        cache = jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *caches) \
+            if len(caches) > 1 else caches[0]
+
+    h = apply_norm(x[:, -1:], p["final_norm"], cfg.norm, cfg.norm_eps)
+    logits = unembed(p, cfg, h, shard)[:, 0]
+    return logits, cache
+
+
+def _hybrid_prefill(p, cfg, x, positions, mask, S_max, shard):
+    def mbody(h, pl):
+        g = apply_norm(h, pl["ln1"], cfg.norm, cfg.norm_eps)
+        y, st = M.mamba2_forward(pl["mixer"], cfg, g)
+        return h + shard(y, "bsd"), st
+
+    lora = p.get("lora")
+    n_grp = p["mamba_grp"]["ln1"]["w"].shape[0]
+
+    def group(h, xs):
+        mgrp, lg = xs
+        h, sts = jax.lax.scan(mbody, h, mgrp)
+        g = apply_norm(h, p["shared"]["ln1"], cfg.norm, cfg.norm_eps)
+        y, kv = A.attn_prefill(p["shared"]["attn"], cfg, g, positions, mask,
+                               S_max)
+        if lora is not None:
+            dq = (g @ lg["qa"]) @ lg["qb"]
+            y = y + A.proj_out(dq, p["shared"]["attn"]["wo"])
+        h = h + shard(y, "bsd")
+        g = apply_norm(h, p["shared"]["ln2"], cfg.norm, cfg.norm_eps)
+        from .layers import mlp_apply
+        h = h + shard(mlp_apply(p["shared"]["mlp"], g, cfg.mlp), "bsd")
+        return h, (sts, kv.k, kv.v)
+
+    lg_xs = lora if lora is not None else jnp.zeros((n_grp, 0))
+    x, (grp, nk, nv) = jax.lax.scan(group, x, (p["mamba_grp"], lg_xs))
+    cache = {"grp": grp, "attn": A.KVCache(nk, nv)}
+    if "mamba_tail" in p:
+        x, tail = jax.lax.scan(mbody, x, p["mamba_tail"])
+        cache["tail"] = tail
+    return x, cache

@@ -1,0 +1,291 @@
+"""Mamba-1 (falcon-mamba) selective scan and Mamba-2 (zamba2) SSD, plus O(1)
+decode state steps.
+
+Training-time recurrences are parallelized TPU-natively:
+  * mamba1: chunked associative scan — ``lax.scan`` over chunks (small HLO)
+    carrying the SSM state, ``associative_scan`` inside each chunk (log-depth,
+    VPU-friendly); the [B,Q,d_inner,d_state] discretized tensors exist one
+    chunk at a time, bounding live memory.
+  * mamba2: the SSD block decomposition — intra-chunk attention-like
+    [Q,Q]-per-head matmuls (MXU work) + inter-chunk state recurrence via
+    associative scan. Scalar-per-head decay makes this exact.
+
+Decode: single-token state update, O(d_inner·d_state) — the reason the
+``long_500k`` shape runs for SSM/hybrid archs only.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import Params, dense_init, rms_norm
+
+
+class MambaState(NamedTuple):
+    conv: jnp.ndarray   # [B, conv_dim, d_conv]  rolling conv window
+    ssm: jnp.ndarray    # m1: [B, d_inner, d_state]; m2: [B, nh, hp, d_state]
+
+
+# ====================================================================== mamba1
+def mamba1_params(key, cfg: ModelConfig, dtype=None) -> Params:
+    dtype = dtype or cfg.dtype
+    d, di, ds, dtr = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dtr
+    ks = jax.random.split(key, 6)
+    A = jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, dtype=dtype),
+        "conv_w": dense_init(ks[1], cfg.d_conv, di, dtype=dtype) * 0.5,
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], di, dtr + 2 * ds, dtype=dtype),
+        "dt_w": dense_init(ks[3], dtr, di, dtype=dtype),
+        "dt_b": jnp.full((di,), -4.6, jnp.float32),      # softplus^-1(0.01)
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, d, dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x [B,S,C], w [K,C]. Returns (y, new_state) where
+    state [B,C,K] holds the last K inputs (for decode continuation)."""
+    B, S, C = x.shape
+    K = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, [(0, 0), (K - 1, 0), (0, 0)])
+    else:
+        xp = jnp.concatenate([jnp.swapaxes(state, 1, 2)[:, -(K - 1):], x],
+                             axis=1)
+    y = sum(xp[:, i:i + S] * w[i] for i in range(K)) + b
+    new_state = jnp.swapaxes(xp[:, -K:], 1, 2) if S >= 1 else state
+    return y, new_state
+
+
+def _assoc_seg(dA, dBx):
+    """h_t = dA_t * h_{t-1} + dBx_t over axis 1 via associative scan."""
+    def comb(l, r):
+        return (r[0] * l[0], r[0] * l[1] + r[1])
+    a, b = jax.lax.associative_scan(comb, (dA, dBx), axis=1)
+    return a, b
+
+
+def mamba1_forward(p: Params, cfg: ModelConfig, x, state: MambaState = None,
+                   chunk: int = 256) -> Tuple[jnp.ndarray, MambaState]:
+    """x [B,S,d] -> (y [B,S,d], final_state)."""
+    B, S, d = x.shape
+    di, ds, dtr = cfg.d_inner, cfg.ssm_state, cfg.dtr
+    xz = x @ p["in_proj"]
+    xm, z = xz[..., :di], xz[..., di:]
+    conv_state = None if state is None else state.conv
+    xm, conv_state = _causal_conv(xm, p["conv_w"], p["conv_b"], conv_state)
+    xm = jax.nn.silu(xm)
+    dbl = xm @ p["x_proj"]
+    dt = jax.nn.softplus(dbl[..., :dtr] @ p["dt_w"]
+                         + p["dt_b"]).astype(jnp.float32)       # [B,S,di]
+    Bp = dbl[..., dtr:dtr + ds].astype(jnp.float32)             # [B,S,ds]
+    Cp = dbl[..., dtr + ds:].astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])                                    # [di,ds]
+    xf = xm.astype(jnp.float32)
+
+    Q = min(chunk, S)
+    nc = -(-S // Q)
+    pad = nc * Q - S
+    def padS(a):
+        return jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+    dt_c = padS(dt).reshape(B, nc, Q, di)
+    B_c = padS(Bp).reshape(B, nc, Q, ds)
+    C_c = padS(Cp).reshape(B, nc, Q, ds)
+    x_c = padS(xf).reshape(B, nc, Q, di)
+
+    h0 = (jnp.zeros((B, di, ds), jnp.float32) if state is None
+          else state.ssm.astype(jnp.float32))
+
+    def chunk_step(h, inp):
+        dtq, bq, cq, xq = inp                                   # [B,Q,·]
+        dBx = (dtq * xq)[..., None] * bq[:, :, None, :]         # [B,Q,di,ds]
+        if cfg.ssm_scan == "cumsum":
+            # log-space prefix form: h_t = e^{L_t}(h0 + Σ_{τ≤t} e^{-L_τ}u_τ)
+            # one cumsum instead of associative_scan's log-depth pad/slice
+            # ladder (§Perf C-cell); exponents clipped at ±60 — only terms
+            # already decayed below e^-60 lose precision.
+            L = jnp.cumsum(dtq[..., None] * A, axis=1)          # [B,Q,di,ds]
+            w = jnp.exp(jnp.clip(-L, None, 60.0))
+            acc = jnp.cumsum(w * dBx, axis=1)
+            hs = jnp.exp(jnp.clip(L, -60.0, None)) * (h[:, None] + acc)
+        else:
+            dA = jnp.exp(dtq[..., None] * A)                    # [B,Q,di,ds]
+            accA, acc = _assoc_seg(dA, dBx)
+            hs = accA * h[:, None] + acc                        # [B,Q,di,ds]
+        y = jnp.einsum("bqds,bqs->bqd", hs, cq)
+        return hs[:, -1], y
+
+    hT, ys = jax.lax.scan(
+        chunk_step, h0,
+        (dt_c.swapaxes(0, 1), B_c.swapaxes(0, 1),
+         C_c.swapaxes(0, 1), x_c.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1).reshape(B, nc * Q, di)[:, :S]
+    y = y + xf * p["D"]
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    if conv_state is None:
+        conv_state = jnp.zeros((B, di, cfg.d_conv), x.dtype)
+    return out, MambaState(conv_state.astype(x.dtype), hT.astype(jnp.float32))
+
+
+def mamba1_decode(p: Params, cfg: ModelConfig, x, state: MambaState,
+                  ) -> Tuple[jnp.ndarray, MambaState]:
+    """x [B,1,d]; O(1) recurrence step."""
+    di, ds, dtr = cfg.d_inner, cfg.ssm_state, cfg.dtr
+    B = x.shape[0]
+    xz = x[:, 0] @ p["in_proj"]
+    xm, z = xz[..., :di], xz[..., di:]
+    conv = jnp.concatenate([state.conv[:, :, 1:], xm[:, :, None]], axis=-1)
+    xm = jnp.einsum("bck,kc->bc", conv, p["conv_w"]) + p["conv_b"]
+    xm = jax.nn.silu(xm)
+    dbl = xm @ p["x_proj"]
+    dt = jax.nn.softplus(dbl[..., :dtr] @ p["dt_w"] + p["dt_b"]
+                         ).astype(jnp.float32)
+    Bp = dbl[..., dtr:dtr + ds].astype(jnp.float32)
+    Cp = dbl[..., dtr + ds:].astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[..., None] * A)                             # [B,di,ds]
+    h = dA * state.ssm + (dt * xm.astype(jnp.float32))[..., None] \
+        * Bp[:, None, :]
+    y = jnp.einsum("bds,bs->bd", h, Cp) + xm.astype(jnp.float32) * p["D"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return (y @ p["out_proj"])[:, None], MambaState(conv, h)
+
+
+# ====================================================================== mamba2
+def mamba2_params(key, cfg: ModelConfig, dtype=None) -> Params:
+    dtype = dtype or cfg.dtype
+    d, di, ds = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh = cfg.n_ssm_heads
+    conv_dim = di + 2 * ds
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * ds + nh, dtype=dtype),
+        "conv_w": dense_init(ks[1], cfg.d_conv, conv_dim, dtype=dtype) * 0.5,
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "dt_b": jnp.full((nh,), -4.6, jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm_w": jnp.zeros((di,), dtype),
+        "out_proj": dense_init(ks[2], di, d, dtype=dtype),
+    }
+
+
+def mamba2_forward(p: Params, cfg: ModelConfig, x, state: MambaState = None,
+                   chunk: int = 128) -> Tuple[jnp.ndarray, MambaState]:
+    """SSD block decomposition. x [B,S,d]."""
+    B, S, d = x.shape
+    di, ds = cfg.d_inner, cfg.ssm_state
+    nh, hp = cfg.n_ssm_heads, cfg.ssm_headdim
+    zxbcdt = x @ p["in_proj"]
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * ds]
+    dt = jax.nn.softplus(zxbcdt[..., -nh:].astype(jnp.float32)
+                         + p["dt_b"])                            # [B,S,nh]
+    conv_state = None if state is None else state.conv
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xm = xbc[..., :di].reshape(B, S, nh, hp)
+    Bp = xbc[..., di:di + ds].astype(jnp.float32)                # [B,S,ds]
+    Cp = xbc[..., di + ds:].astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])                                     # [nh]
+    dA = dt * A                                                  # [B,S,nh] (log decay)
+
+    Q = min(chunk, S)
+    nc = -(-S // Q)
+    pad = nc * Q - S
+    def padS(a):
+        return jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+    dA_c = padS(dA).reshape(B, nc, Q, nh)
+    dt_c = padS(dt).reshape(B, nc, Q, nh)
+    x_c = padS(xm.astype(jnp.float32)).reshape(B, nc, Q, nh, hp)
+    B_c = padS(Bp).reshape(B, nc, Q, ds)
+    C_c = padS(Cp).reshape(B, nc, Q, ds)
+
+    cum = jnp.cumsum(dA_c, axis=2)                               # [B,nc,Q,nh]
+    # ---- intra-chunk (attention-like, exact for τ<=t) ----
+    Lmat = cum[:, :, :, None, :] - cum[:, :, None, :, :]         # [B,nc,Q,Q,nh]
+    tri = (jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :])
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(Lmat), 0.0)
+    G = jnp.einsum("bnts,bnqs->bntq", C_c, B_c)                  # [B,nc,Q,Q]
+    M = G[..., None] * decay                                     # [B,nc,Q,Q,nh]
+    M = M * dt_c[:, :, None, :, :]                               # fold dt into B·x
+    y_intra = jnp.einsum("bntqh,bnqhp->bnthp", M, x_c)
+    # ---- chunk states ----
+    last = cum[:, :, -1:, :]                                     # [B,nc,1,nh]
+    sdecay = jnp.exp(last - cum)                                 # [B,nc,Q,nh]
+    Sc = jnp.einsum("bnqs,bnqh,bnqhp->bnhsp",
+                    B_c, sdecay * dt_c, x_c)                     # [B,nc,nh,ds,hp]
+    # ---- inter-chunk recurrence over nc ----
+    h0 = (jnp.zeros((B, nh, ds, hp), jnp.float32) if state is None
+          else state.ssm.astype(jnp.float32))
+    cdecay = jnp.exp(last[:, :, 0, :])                           # [B,nc,nh]
+
+    def comb(l, r):
+        aL, sL = l
+        aR, sR = r
+        return (aR * aL, aR[..., None, None] * sL + sR)
+
+    accA, accS = jax.lax.associative_scan(comb, (cdecay, Sc), axis=1)
+    # h_before_chunk_n = decay of all previous chunks applied to h0 + states
+    accA_prev = jnp.concatenate(
+        [jnp.ones_like(accA[:, :1]), accA[:, :-1]], axis=1)
+    accS_prev = jnp.concatenate(
+        [jnp.zeros_like(accS[:, :1]), accS[:, :-1]], axis=1)
+    h_in = (accA_prev[..., None, None] * h0[:, None]
+            + accS_prev)                                         # [B,nc,nh,ds,hp]
+    # ---- inter-chunk contribution to outputs ----
+    edecay = jnp.exp(cum)                                        # decay from chunk start
+    y_inter = jnp.einsum("bnqs,bnqh,bnhsp->bnqhp", C_c, edecay, h_in)
+    y = (y_intra + y_inter).reshape(B, nc * Q, nh, hp)[:, :S]
+    y = y + xm.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    hT = accA[:, -1][..., None, None] * h0 + accS[:, -1]
+    if conv_state is None:
+        conv_state = jnp.zeros((B, di + 2 * ds, cfg.d_conv), x.dtype)
+    return out, MambaState(conv_state.astype(x.dtype), hT)
+
+
+def mamba2_decode(p: Params, cfg: ModelConfig, x, state: MambaState,
+                  ) -> Tuple[jnp.ndarray, MambaState]:
+    di, ds = cfg.d_inner, cfg.ssm_state
+    nh, hp = cfg.n_ssm_heads, cfg.ssm_headdim
+    B = x.shape[0]
+    zxbcdt = x[:, 0] @ p["in_proj"]
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * ds]
+    dt = jax.nn.softplus(zxbcdt[..., -nh:].astype(jnp.float32) + p["dt_b"])
+    conv = jnp.concatenate([state.conv[:, :, 1:], xbc[:, :, None]], axis=-1)
+    xbc = jnp.einsum("bck,kc->bc", conv, p["conv_w"]) + p["conv_b"]
+    xbc = jax.nn.silu(xbc)
+    xm = xbc[..., :di].reshape(B, nh, hp).astype(jnp.float32)
+    Bp = xbc[..., di:di + ds].astype(jnp.float32)
+    Cp = xbc[..., di + ds:].astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A)                                          # [B,nh]
+    h = a[..., None, None] * state.ssm \
+        + jnp.einsum("bh,bs,bhp->bhsp", dt, Bp, xm)
+    y = jnp.einsum("bs,bhsp->bhp", Cp, h) + xm * p["D"][None, :, None]
+    y = y.reshape(B, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    return (y @ p["out_proj"])[:, None], MambaState(conv, h)
+
+
+def init_mamba_state(cfg: ModelConfig, B: int, n_layers: int,
+                     dtype=jnp.bfloat16) -> MambaState:
+    if cfg.ssm_version == 1:
+        conv_dim, ssm_shape = cfg.d_inner, (cfg.d_inner, cfg.ssm_state)
+    else:
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+        ssm_shape = (cfg.n_ssm_heads, cfg.ssm_headdim, cfg.ssm_state)
+    return MambaState(
+        jnp.zeros((n_layers, B, conv_dim, cfg.d_conv), dtype),
+        jnp.zeros((n_layers, B) + ssm_shape, jnp.float32))

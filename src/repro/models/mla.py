@@ -1,0 +1,123 @@
+"""Multi-head Latent Attention (DeepSeek-V3) with absorbed-latent decode.
+
+Train/prefill: standard MLA — queries via low-rank q projection, keys/values
+up-projected from a compressed latent c_kv; a single shared rotary key head.
+Decode: the cache holds only (c_kv, k_rope) per position ([kv_lora + rope]
+floats/token — the paper point of MLA); W_uk is absorbed into the query and
+W_uv into the output so attention runs entirely in latent space.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import Params, dense_init, rms_norm, rope_apply, rope_freqs
+
+
+class MLACache(NamedTuple):
+    ckv: jnp.ndarray     # [B, S_max, kv_lora]
+    krope: jnp.ndarray   # [B, S_max, rope_dim]
+
+
+def mla_params(key, cfg: ModelConfig, dtype=None) -> Params:
+    dtype = dtype or cfg.dtype
+    d, H = cfg.d_model, cfg.n_heads
+    qr, kr = cfg.q_lora_rank, cfg.kv_lora_rank
+    nope, rope, vh = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "wdq": dense_init(ks[0], d, qr, dtype=dtype),
+        "qnorm": {"w": jnp.zeros((qr,), dtype)},
+        "wuq": dense_init(ks[1], qr, H, nope + rope, dtype=dtype),
+        "wdkv": dense_init(ks[2], d, kr, dtype=dtype),
+        "kvnorm": {"w": jnp.zeros((kr,), dtype)},
+        "wkr": dense_init(ks[3], d, rope, dtype=dtype),
+        "wukv": dense_init(ks[4], kr, H, nope + vh, dtype=dtype),
+        "wo": (jax.random.truncated_normal(ks[5], -2.0, 2.0, (H, vh, d),
+                                           jnp.float32)
+               * ((H * vh) ** -0.5)).astype(dtype),
+    }
+
+
+def _queries(p, cfg: ModelConfig, x, positions):
+    nope, rope = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    q = rms_norm(x @ p["wdq"], p["qnorm"]["w"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rnh->bsnh", q, p["wuq"])
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    sin, cos = rope_freqs(positions, rope, cfg.rope_theta)
+    q_rope = rope_apply(q_rope, sin, cos)
+    return q_nope, q_rope
+
+
+def _latents(p, cfg: ModelConfig, x, positions):
+    rope = cfg.qk_rope_head_dim
+    ckv = rms_norm(x @ p["wdkv"], p["kvnorm"]["w"], cfg.norm_eps)
+    kr = (x @ p["wkr"])[:, :, None, :]                   # [B,S,1,rope]
+    sin, cos = rope_freqs(positions, rope, cfg.rope_theta)
+    kr = rope_apply(kr, sin, cos)[:, :, 0, :]
+    return ckv, kr
+
+
+def mla_forward(p: Params, cfg: ModelConfig, x, positions, mask) -> jnp.ndarray:
+    """Full-sequence MLA (training / prefill compute).
+
+    Folded into standard attention by concatenating the rotary slice onto
+    every head's nope slice — the shared rotary key broadcasts across heads —
+    so the flash-tiled sdpa path applies unchanged (mask is a MaskSpec).
+    """
+    from .attention import sdpa
+    nope, vh = cfg.qk_nope_head_dim, cfg.v_head_dim
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    q_nope, q_rope = _queries(p, cfg, x, positions)
+    ckv, kr = _latents(p, cfg, x, positions)
+    kv = jnp.einsum("btr,rnh->btnh", ckv, p["wukv"])
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_cat = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr[:, :, None, :], k_nope.shape[:3]
+                                  + (cfg.qk_rope_head_dim,))], axis=-1)
+    scale = (nope + cfg.qk_rope_head_dim) ** -0.5
+    out = sdpa(q_cat, k_cat, v, mask, 1, scale=scale)
+    from .attention import proj_out
+    return proj_out(out, p["wo"])
+
+
+def mla_prefill(p, cfg, x, positions, mask, cache_len: int,
+                ) -> Tuple[jnp.ndarray, MLACache]:
+    y = mla_forward(p, cfg, x, positions, mask)
+    ckv, kr = _latents(p, cfg, x, positions)
+    S = x.shape[1]
+    pad = [(0, 0), (0, cache_len - S), (0, 0)]
+    return y, MLACache(jnp.pad(ckv, pad).astype(jnp.bfloat16),
+                       jnp.pad(kr, pad).astype(jnp.bfloat16))
+
+
+def mla_decode(p: Params, cfg: ModelConfig, x, pos, cache: MLACache,
+               ) -> Tuple[jnp.ndarray, MLACache]:
+    """Absorbed-latent one-token decode. x [B,1,d], pos [B]."""
+    nope, vh = cfg.qk_nope_head_dim, cfg.v_head_dim
+    B = x.shape[0]
+    q_nope, q_rope = _queries(p, cfg, x, pos[:, None])   # [B,1,H,·]
+    ckv_t, kr_t = _latents(p, cfg, x, pos[:, None])      # [B,1,kr], [B,1,rope]
+    bidx = jnp.arange(B)
+    ckv = cache.ckv.at[bidx, pos].set(ckv_t[:, 0].astype(cache.ckv.dtype))
+    krope = cache.krope.at[bidx, pos].set(kr_t[:, 0].astype(cache.krope.dtype))
+
+    wuk = p["wukv"][..., :nope]                          # [kr, H, nope]
+    wuv = p["wukv"][..., nope:]                          # [kr, H, vh]
+    q_lat = jnp.einsum("bnh,rnh->bnr", q_nope[:, 0], wuk)      # absorb W_uk
+    scale = (nope + cfg.qk_rope_head_dim) ** -0.5
+    logits = (jnp.einsum("bnr,btr->bnt", q_lat, ckv.astype(x.dtype),
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bnh,bth->bnt", q_rope[:, 0], krope.astype(x.dtype),
+                           preferred_element_type=jnp.float32)) * scale
+    valid = jnp.arange(ckv.shape[1])[None, None, :] <= pos[:, None, None]
+    w = jax.nn.softmax(jnp.where(valid, logits, -1e30), axis=-1)
+    lat = jnp.einsum("bnt,btr->bnr", w.astype(x.dtype), ckv.astype(x.dtype))
+    out = jnp.einsum("bnr,rnh->bnh", lat, wuv)           # absorb W_uv
+    y = jnp.einsum("bnh,nhd->bd", out, p["wo"])[:, None]
+    return y, MLACache(ckv, krope)

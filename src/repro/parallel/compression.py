@@ -1,0 +1,52 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+int8 block-quantization of gradients with an f32 error-feedback accumulator:
+  q = round(g_scaled); err' = g - dequant(q); next step adds err' back.
+Used between microbatch accumulation and the optimizer update; on a real
+multi-host deployment the int8 tensors are what crosses DCN between pods
+(4x byte reduction on the 'pod' axis all-reduce). Error feedback keeps the
+asymptotic convergence of uncompressed SGD/Adam (Karimireddy et al., 2019).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def quantize_int8(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-block symmetric int8. Returns (q int8, scale f32)."""
+    flat = g.astype(jnp.float32).reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(blocks / jnp.maximum(scale, 1e-12)),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale, shape) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def compress_grads_ef(grads, error_fb):
+    """Apply int8 quantization with error feedback to every leaf."""
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(error_fb)
+    deqs, errs = [], []
+    for g, e in zip(flat_g, flat_e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize_int8(corrected)
+        deq = dequantize_int8(q, s, g.shape)
+        deqs.append(deq.astype(g.dtype))
+        errs.append(corrected - deq)
+    return (jax.tree_util.tree_unflatten(treedef, deqs),
+            jax.tree_util.tree_unflatten(treedef, errs))

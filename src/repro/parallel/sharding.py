@@ -1,0 +1,271 @@
+"""Sharding rules: logical activation kinds + name-based parameter specs.
+
+Model code calls ``shard(x, kind)`` at block boundaries; outside a sharding
+context that is the identity, inside it becomes
+``jax.lax.with_sharding_constraint`` with the mesh's rule table. Parameter
+specs are derived from tree paths + shapes with divisibility checks (a dim
+is sharded over an axis only if the axis size divides it — otherwise GSPMD
+padding waste is avoided by replicating; e.g. paligemma's 8 q-heads on a
+16-way model axis stay replicated, its 16384 d_ff shards).
+
+Axes: batch-like dims shard over ("pod","data") [present axes only], tensor
+dims over "model" (Megatron TP / EP / vocab-parallel), optional FSDP adds
+"data" on a weight dim (ZeRO-3-style; XLA inserts the all-gathers).
+"""
+from __future__ import annotations
+
+import re
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CTX = threading.local()
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axis_size(mesh: Mesh, *names: str) -> int:
+    s = 1
+    for n in names:
+        if n in mesh.axis_names:
+            s *= mesh.shape[n]
+    return s
+
+
+class ShardCtx:
+    """Context manager installing activation-constraint rules for a mesh."""
+
+    def __init__(self, mesh: Mesh, fsdp: bool = False):
+        self.mesh = mesh
+        self.fsdp = fsdp
+        ba = batch_axes(mesh)
+        self.rules = {
+            "bsd": P(ba, None, None),
+            "bsv": P(ba, None, "model"),
+            "becd": P(ba, "model", None, None),
+            "bsec": P(ba, None, "model", None),
+            "bec": P(ba, "model", None),
+            "bhst": P(ba, "model", None, None),
+        }
+
+    def __enter__(self):
+        _CTX.ctx = self
+        return self
+
+    def __exit__(self, *a):
+        _CTX.ctx = None
+
+
+def shard(x, kind: str):
+    ctx: Optional[ShardCtx] = getattr(_CTX, "ctx", None)
+    if ctx is None:
+        return x
+    spec = ctx.rules.get(kind)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))
+
+
+# ------------------------------------------------------------------- params
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+    return "/".join(out)
+
+
+def param_spec(path: str, shape: Tuple[int, ...], mesh: Mesh,
+               fsdp: bool = False, hd_shard: bool = False) -> P:
+    """Name+shape-based parameter partition spec.
+
+    Layer-stacked params carry 1-2 leading stack dims which are never
+    sharded; we match on the *trailing* dims. ``hd_shard``: when the head
+    count doesn't divide the model axis, shard the head_dim instead
+    (decode-specialized: replicated QKV/O weights dominate decode HBM
+    traffic; the price — partial-softmax all-reduces and a rotate-half
+    permute — is tiny for single-token steps).
+    """
+    tp = axis_size(mesh, "model")
+    dp = axis_size(mesh, "data")
+    nd = len(shape)
+
+    def spec_tail(*tail):
+        return P(*([None] * (nd - len(tail)) + list(tail)))
+
+    # ---- embeddings / heads: vocab-parallel (replicate if not divisible)
+    if re.search(r"(^|/)embed$", path) or re.search(r"lm_head$", path):
+        if path.endswith("lm_head"):          # [d, V]
+            return spec_tail(None, "model" if _div(shape[-1], tp) else None)
+        return spec_tail("model" if _div(shape[-2], tp) else None, None)
+    # ---- MoE experts: EP over model, [E, d, f] / [E, f, d]
+    if re.search(r"moe/(wi|wg|wo)$", path) or re.search(r"/mtp/.*moe/(wi|wg|wo)$", path):
+        if _div(shape[-3] if nd >= 3 else 0, tp):
+            return spec_tail("model", None, None)
+        return spec_tail(None, None, None)
+    if re.search(r"moe/router(_bias)?$", path):
+        return P(*([None] * nd))
+    # ---- attention projections [d, H, hd] / [H, hd, d] (+ biases [H, hd])
+    if re.search(r"(attn|cross|self)/w[qkv]$", path):
+        H, hd = shape[-2], shape[-1]
+        if _div(H, tp):
+            return spec_tail(None, "model", None)
+        if hd_shard and _div(hd, tp):
+            return spec_tail(None, None, "model")
+        return spec_tail(None, None, None)
+    if re.search(r"(attn|cross|self)/b[qkv]$", path):
+        H, hd = shape[-2], shape[-1]
+        if _div(H, tp):
+            return spec_tail("model", None)
+        if hd_shard and _div(hd, tp):
+            return spec_tail(None, "model")
+        return spec_tail(None, None)
+    if re.search(r"(attn|cross|self)/wo$", path):
+        H, hd = shape[-3], shape[-2]          # [.., H, hd, d] uniformly
+        if _div(H, tp):
+            return spec_tail("model", None, None)
+        if hd_shard and _div(hd, tp):
+            return spec_tail(None, "model", None)
+        return spec_tail(None, None, None)
+    # ---- MLA
+    if re.search(r"attn/wuq$", path) or re.search(r"attn/wukv$", path):
+        H = shape[-2]
+        return spec_tail(None, "model" if _div(H, tp) else None, None)
+    if re.search(r"attn/(wdq|wdkv|wkr)$", path):
+        return spec_tail(None, None)
+    # ---- dense MLP [d, f] / [f, d]
+    if re.search(r"mlp/(wi|wg)$", path) or re.search(r"shared/(wi|wg)$", path):
+        return spec_tail(None, "model" if _div(shape[-1], tp) else None)
+    if re.search(r"mlp/wo$", path) or re.search(r"shared/wo$", path):
+        return spec_tail("model" if _div(shape[-2], tp) else None, None)
+    # ---- mamba
+    if re.search(r"mixer/in_proj$", path):
+        return spec_tail(None, "model" if _div(shape[-1], tp) else None)
+    if re.search(r"mixer/out_proj$", path):
+        return spec_tail("model" if _div(shape[-2], tp) else None, None)
+    if re.search(r"mixer/(x_proj|dt_w)$", path):
+        return spec_tail("model" if _div(shape[-2], tp) else None, None)
+    if re.search(r"mixer/(conv_w|conv_b|dt_b|A_log|D|norm_w)$", path):
+        return P(*([None] * nd))
+    # ---- projectors / positions / norms / everything else: replicated
+    return P(*([None] * nd))
+
+
+def _validate(spec: P, shape, mesh: Mesh) -> P:
+    """Drop any spec entry whose axis size doesn't divide the dim (pjit
+    input shardings require exact divisibility; GSPMD padding is only for
+    constraints)."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for e, n in zip(entries, shape):
+        if e is None:
+            out.append(None)
+            continue
+        names = e if isinstance(e, tuple) else (e,)
+        k = axis_size(mesh, *names)
+        out.append(e if (k and n % k == 0) else None)
+    return P(*out)
+
+
+def add_fsdp(spec: P, shape, mesh: Mesh, axis: str = "data") -> P:
+    """ZeRO-3/FSDP: additionally shard one free dim over the data axis.
+    Stack dims (dim 0 of rank≥3 scan-stacked params) are skipped so
+    per-layer slicing stays trivial; the biggest free divisible dim wins
+    (XLA inserts the per-layer all-gather — classic FSDP)."""
+    if axis not in mesh.axis_names:
+        return spec
+    k = mesh.shape[axis]
+    if k <= 1:
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    cands = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in cands:
+        if i == 0 and len(shape) >= 3:
+            continue
+        if entries[i] is None and shape[i] % k == 0 and shape[i] >= k:
+            entries[i] = axis
+            return P(*entries)
+    return P(*entries)
+
+
+def param_shardings(params, mesh: Mesh, fsdp: bool = False,
+                    hd_shard: bool = False):
+    """Pytree of NamedShardings matching ``params`` (works on SDS trees)."""
+    def one(path, leaf):
+        shape = np.shape(leaf)
+        spec = param_spec(_path_str(path), shape, mesh, fsdp,
+                          hd_shard=hd_shard)
+        spec = _validate(spec, shape, mesh)
+        if fsdp:
+            spec = add_fsdp(spec, shape, mesh)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def batch_shardings(batch, mesh: Mesh):
+    ba = batch_axes(mesh)
+    def one(leaf):
+        shape = np.shape(leaf)
+        spec = P(*([ba] + [None] * (len(shape) - 1)))
+        return NamedSharding(mesh, _validate(spec, shape, mesh))
+    return jax.tree_util.tree_map(one, batch)
+
+
+# --------------------------------------------------------------- kv caches
+def cache_spec(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Decode-cache specs: batch over ("pod","data"); kv-heads over "model"
+    when divisible, else the *sequence* dim shards over "model"
+    (flash-decoding-style partial softmax — XLA inserts the combines)."""
+    tp = axis_size(mesh, "model")
+    ba = batch_axes(mesh)
+    nd = len(shape)
+    dpp = axis_size(mesh, *ba)
+    # identify [.., B, S, kv, hd] attention caches by rank+name
+    if re.search(r"(^|/)(k|v)$", path) and nd >= 4:
+        B, S, KV = shape[-4], shape[-3], shape[-2]
+        lead = [None] * (nd - 4)
+        bspec = ba if _div(B, dpp) else None
+        if _div(KV, tp):
+            return P(*lead, bspec, None, "model", None)
+        return P(*lead, bspec, "model" if _div(S, tp) else None, None, None)
+    if re.search(r"(ckv|krope)$", path) and nd >= 3:   # MLA latent [L,B,S,r]
+        B, S = shape[-3], shape[-2]
+        lead = [None] * (nd - 3)
+        bspec = ba if _div(B, dpp) else None
+        return P(*lead, bspec, "model" if _div(S, tp) else None, None)
+    if re.search(r"(conv|ssm)$", path) and nd >= 3:    # mamba states
+        B = shape[-3] if nd >= 3 else 0
+        # [.., B, C, K] conv / [.., B, d, s] or [.., B, nh, hp, s] ssm
+        lead = [None] * (nd - 3)
+        bspec = ba if _div(B, dpp) else None
+        c = shape[-2]
+        return P(*lead, bspec, "model" if _div(c, tp) else None, None)
+    if re.search(r"cross_[kv]$", path) and nd >= 4:
+        B, S, KV = shape[-4], shape[-3], shape[-2]
+        lead = [None] * (nd - 4)
+        bspec = ba if _div(B, dpp) else None
+        if _div(KV, tp):
+            return P(*lead, bspec, None, "model", None)
+        return P(*lead, bspec, "model" if _div(S, tp) else None, None, None)
+    return P(*([None] * nd))
+
+
+def cache_shardings(cache, mesh: Mesh):
+    def one(path, leaf):
+        spec = cache_spec(_path_str(path), np.shape(leaf), mesh)
+        return NamedSharding(mesh, _validate(spec, np.shape(leaf), mesh))
+    return jax.tree_util.tree_map_with_path(one, cache)

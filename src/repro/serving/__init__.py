@@ -1,0 +1,1 @@
+from . import engine, pages, prefix_cache  # noqa: F401

@@ -1,0 +1,1 @@
+from . import checkpoint, data, ft, losses, optim, train_step  # noqa: F401

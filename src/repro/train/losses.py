@@ -1,0 +1,32 @@
+"""Loss assembly per family: shifted-token CE + MoE aux + DeepSeek MTP."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.models.layers import softmax_xent
+
+AUX_COEF = 0.01
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict, shard=lm.NOSHARD,
+            ) -> Tuple[jnp.ndarray, Dict]:
+    logits, aux, hidden = lm.forward(params, cfg, batch, shard)
+    tokens = batch["tokens"]
+    if cfg.family == "vlm":        # text positions only
+        logits_txt = logits[:, cfg.n_patches:]
+        ce = softmax_xent(logits_txt[:, :-1], tokens[:, 1:])
+    else:
+        ce = softmax_xent(logits[:, :-1], tokens[:, 1:])
+    loss = ce + AUX_COEF * aux
+    metrics = {"ce": ce, "aux": aux}
+    if cfg.mtp:
+        mlogits = lm.mtp_logits(params, cfg, hidden, tokens, shard)
+        mtp_ce = softmax_xent(mlogits[:, :-2], tokens[:, 2:])
+        loss = loss + cfg.mtp_weight * mtp_ce
+        metrics["mtp_ce"] = mtp_ce
+    metrics["loss"] = loss
+    return loss, metrics

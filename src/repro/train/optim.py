@@ -1,0 +1,200 @@
+"""Optimizers (hand-rolled; no optax offline): AdamW and Adafactor, with
+global-norm clipping, cosine schedule with warmup, and ZeRO-style sharded
+optimizer states.
+
+AdamW keeps f32 (m, v) + f32 master copies when params are bf16 (mixed
+precision). Adafactor keeps factored second moments only (row/col) — the
+memory plan that lets the 671B config fit 512 chips (DESIGN.md §5).
+State sharding: each state tensor inherits its param's spec; ZeRO-1
+additionally shards a free dim over "data" when divisible (zero_spec).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"          # adamw | adafactor
+    lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    min_lr_frac: float = 0.1
+
+
+def schedule(cfg: OptConfig, step):
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup, 1), 1.0)
+    t = jnp.clip((s - cfg.warmup) / jnp.maximum(cfg.total_steps - cfg.warmup, 1),
+                 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+# ------------------------------------------------------------------- adamw
+def adamw_init(params):
+    f32 = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {"m": jax.tree_util.tree_map(f32, params),
+            "v": jax.tree_util.tree_map(f32, params),
+            "master": jax.tree_util.tree_map(
+                lambda p: p.astype(jnp.float32), params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(cfg: OptConfig, params, grads, state):
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v, master):
+        g = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        u = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + cfg.eps)
+        if p.ndim >= 2:   # decoupled decay on matrices only
+            u = u + cfg.weight_decay * master
+        master2 = master - lr * u
+        return master2.astype(p.dtype), m2, v2, master2
+
+    out = jax.tree_util.tree_map(upd, params, grads, state["m"], state["v"],
+                                 state["master"])
+    new_p = jax.tree_util.tree_map(lambda t: t[0], out,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], out,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[2], out,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    new_master = jax.tree_util.tree_map(lambda t: t[3], out,
+                                        is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, {"m": new_m, "v": new_v, "master": new_master,
+                   "step": step}, {"grad_norm": gnorm, "lr": lr}
+
+
+# --------------------------------------------------------------- adafactor
+def adafactor_init(params):
+    def rows(p):
+        if p.ndim >= 2:
+            return jnp.zeros(p.shape[:-1], jnp.float32)
+        return jnp.zeros(p.shape, jnp.float32)
+
+    def cols(p):
+        if p.ndim >= 2:
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        return jnp.zeros((1,), jnp.float32)
+
+    return {"vr": jax.tree_util.tree_map(rows, params),
+            "vc": jax.tree_util.tree_map(cols, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(cfg: OptConfig, params, grads, state):
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    beta = 1.0 - (step.astype(jnp.float32) ** -0.8)
+
+    def upd(p, g, vr, vc):
+        g = g.astype(jnp.float32)
+        g2 = g * g + 1e-30
+        if p.ndim >= 2:
+            vr2 = beta * vr + (1 - beta) * g2.mean(-1)
+            vc2 = beta * vc + (1 - beta) * g2.mean(-2)
+            denom = (vr2[..., None] * vc2[..., None, :]
+                     / jnp.maximum(vr2.mean(-1)[..., None, None], 1e-30))
+            u = g * jax.lax.rsqrt(denom + 1e-30)
+        else:
+            vr2 = beta * vr + (1 - beta) * g2
+            vc2 = vc
+            u = g * jax.lax.rsqrt(vr2 + 1e-30)
+        # update clipping (Adafactor d=1.0)
+        rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms_u)
+        pf = p.astype(jnp.float32)
+        if p.ndim >= 2:
+            pf = pf * (1 - lr * cfg.weight_decay)
+        return (pf - lr * u).astype(p.dtype), vr2, vc2
+
+    out = jax.tree_util.tree_map(upd, params, grads, state["vr"], state["vc"])
+    pick = lambda i: jax.tree_util.tree_map(
+        lambda t: t[i], out, is_leaf=lambda t: isinstance(t, tuple))
+    return pick(0), {"vr": pick(1), "vc": pick(2), "step": step}, \
+        {"grad_norm": gnorm, "lr": lr}
+
+
+# ------------------------------------------------------------------ facade
+def opt_init(cfg: OptConfig, params):
+    return adamw_init(params) if cfg.kind == "adamw" else adafactor_init(params)
+
+
+def opt_update(cfg: OptConfig, params, grads, state):
+    if cfg.kind == "adamw":
+        return adamw_update(cfg, params, grads, state)
+    return adafactor_update(cfg, params, grads, state)
+
+
+# ---------------------------------------------------------------- ZeRO spec
+def zero_spec(pspec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """ZeRO-1: shard one free dim of an optimizer-state tensor over 'data'."""
+    dp = mesh.shape.get("data", 1) if "data" in mesh.axis_names else 1
+    entries = list(pspec) + [None] * (len(shape) - len(pspec))
+    for e in entries:                 # FSDP already shards over 'data'
+        names = e if isinstance(e, tuple) else (e,)
+        if "data" in names:
+            return P(*entries)
+    for i, (e, n) in enumerate(zip(entries, shape)):
+        if e is None and dp > 1 and n % dp == 0 and n >= dp:
+            entries[i] = "data"
+            break
+    return P(*entries)
+
+
+def opt_state_shardings(state, param_shardings, mesh: Mesh, zero1: bool = True):
+    """Shardings for the optimizer-state tree. m/v/master mirror params
+    (+ZeRO); factored vr/vc and scalars follow shape-based rules."""
+    pshard_by_struct = {}
+
+    def like_param(sub):
+        def one(ps, leaf):
+            spec = ps.spec
+            if zero1:
+                spec = zero_spec(spec, np.shape(leaf), mesh)
+            return NamedSharding(mesh, spec)
+        return jax.tree_util.tree_map(one, param_shardings, sub)
+
+    out = {}
+    for k, sub in state.items():
+        if k == "step":
+            out[k] = NamedSharding(mesh, P())
+        elif k in ("m", "v", "master"):
+            out[k] = like_param(sub)
+        else:  # vr / vc — factored: replicate (small) unless dim divisible
+            def one(leaf):
+                shape = np.shape(leaf)
+                spec = zero_spec(P(), shape, mesh) if zero1 else P()
+                return NamedSharding(mesh, spec)
+            out[k] = jax.tree_util.tree_map(one, sub)
+    return out

@@ -1,0 +1,81 @@
+"""Train step: value_and_grad + microbatch accumulation + optimizer update.
+
+Microbatching (grad accumulation) runs as a ``lax.scan`` over microbatch
+slices with an f32 grad accumulator; because each microbatch's backward ends
+in reduce-scatter-able contributions, XLA overlaps the collectives of
+microbatch *i* with the compute of microbatch *i+1* (DESIGN.md §5 —
+comm/compute overlap knob, exercised in §Perf). Optional int8+error-feedback
+gradient compression plugs in between accumulation and the update.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.parallel import compression as C
+from repro.train import optim as O
+from repro.train.losses import loss_fn
+
+
+def init_state(cfg: ModelConfig, opt_cfg: O.OptConfig, key):
+    from repro.models import lm
+    params = lm.init_params(cfg, key)
+    return {"params": params, "opt": O.opt_init(opt_cfg, params)}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: O.OptConfig, shard=None,
+                    n_micro: int = 1, compress: bool = False):
+    """Returns f(state, batch) -> (state', metrics). Pure — jit at call site."""
+    if shard is None:
+        from repro.models.lm import NOSHARD as shard  # noqa
+
+    def grads_of(params, batch):
+        (l, m), g = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch, shard), has_aux=True)(params)
+        return g, m
+
+    def step(state, batch):
+        params = state["params"]
+        if n_micro == 1:
+            grads, metrics = grads_of(params, batch)
+        else:
+            def micro(acc, mb):
+                g, m = grads_of(params, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), acc, g)
+                return acc, m
+            acc0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape((n_micro, x.shape[0] // n_micro)
+                                    + x.shape[1:]), batch)
+            grads, ms = jax.lax.scan(micro, acc0, mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads)
+            metrics = jax.tree_util.tree_map(lambda a: a[-1], ms)
+        if compress:
+            eb = state.get("error_fb")
+            if eb is None:
+                eb = jax.tree_util.tree_map(
+                    lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+            grads, eb = C.compress_grads_ef(grads, eb)
+            state = dict(state, error_fb=eb)
+        new_params, new_opt, om = O.opt_update(opt_cfg, params, grads,
+                                               state["opt"])
+        metrics = dict(metrics, **om)
+        return dict(state, params=new_params, opt=new_opt), metrics
+
+    return step
+
+
+def make_eval_step(cfg: ModelConfig, shard=None):
+    if shard is None:
+        from repro.models.lm import NOSHARD as shard  # noqa
+
+    def step(params, batch):
+        _, metrics = loss_fn(params, cfg, batch, shard)
+        return metrics
+    return step

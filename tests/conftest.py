@@ -1,0 +1,10 @@
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here — smoke tests must see the real (1-device) CPU;
+# only launch/dryrun.py forces 512 host devices (per assignment brief).
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0xFB)

@@ -1,0 +1,81 @@
+"""Factor-analysis baselines: every variant must return identical results;
+the modeled hardware counters must reproduce the paper's orderings."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import keys as K
+from repro.core.baseline import VARIANTS, lookup_variant
+from repro.core.fbtree import TreeConfig, bulk_build
+
+
+@pytest.fixture(scope="module")
+def tree_and_keys():
+    rng = np.random.default_rng(42)
+    # skewed string keys: shared prefixes (zipf-ish families)
+    fams = [b"com.example.", b"org.acme.", b"io.x.", b"net.service.deep."]
+    keys = list({fams[int(rng.zipf(1.4)) % 4] + bytes(rng.integers(97, 123, size=8, dtype=np.uint8)) for _ in range(3000)})
+    ks = K.make_keyset(keys, 32)
+    cfg = TreeConfig.plan(max_keys=2 * len(keys), key_width=32)
+    t = bulk_build(cfg, ks, np.arange(len(keys), dtype=np.int32))
+    return t, ks, keys
+
+
+def test_variants_agree(tree_and_keys):
+    t, ks, keys = tree_and_keys
+    qb, ql = jnp.asarray(ks.bytes[:512]), jnp.asarray(ks.lens[:512])
+    outs = {}
+    for var in VARIANTS:
+        found, val, st, ls = lookup_variant(t, qb, ql, variant=var)
+        assert bool(found.all()), var
+        outs[var] = np.asarray(val)
+    for var in VARIANTS[1:]:
+        assert (outs[var] == outs[VARIANTS[0]]).all(), var
+
+
+def _dense_keys(n=3000):
+    """ycsb-style keys: long shared plen, then dense digits — the paper's
+    'dense' regime where feature comparison fully resolves branches."""
+    rng = np.random.default_rng(5)
+    keys = list({f"user{int(x):016d}".encode()
+                 for x in rng.integers(0, 10**15, size=2 * n)})[:n]
+    return keys
+
+
+def test_feature_reduces_key_compares_and_lines(tree_and_keys):
+    """Fig 12a ordering on dense keys: feature comparison slashes full-key
+    compares; the hashtag leaf drops further lines."""
+    keys = _dense_keys()
+    ks = K.make_keyset(keys, 24)
+    cfg = TreeConfig.plan(max_keys=2 * len(keys), key_width=24)
+    t = bulk_build(cfg, ks, np.arange(len(keys), dtype=np.int32))
+    qb, ql = jnp.asarray(ks.bytes[:1024]), jnp.asarray(ks.lens[:1024])
+    stats = {}
+    for var in VARIANTS:
+        _, _, st, ls = lookup_variant(t, qb, ql, variant=var)
+        stats[var] = (float(st.key_compares.mean()),
+                      float(st.lines_touched.mean()))
+    assert stats["feature"][0] < 0.3 * stats["base"][0]
+    assert stats["feature+hash"][1] < stats["feature"][1]
+    assert stats["feature"][1] < stats["base"][1]
+
+
+def test_suffix_fallback_rate_drops_with_fs(tree_and_keys):
+    """Fig 13b analogue: suffix binary searches decrease as fs grows (dense
+    keys; url-like family prefixes keep a floor — the paper's sparse case,
+    checked for monotonicity only)."""
+    for keyset, need_big_drop in ((_dense_keys(), True),
+                                  (tree_and_keys[2], False)):
+        ks = K.make_keyset(keyset, 32)
+        rates = []
+        for fs in (1, 2, 4, 8):
+            cfg = TreeConfig.plan(max_keys=2 * len(keyset), key_width=32,
+                                  fs=fs)
+            t = bulk_build(cfg, ks, np.arange(len(keyset), dtype=np.int32))
+            qb = jnp.asarray(ks.bytes[:1024])
+            ql = jnp.asarray(ks.lens[:1024])
+            _, _, st, _ = lookup_variant(t, qb, ql, variant="feature+hash")
+            rates.append(float(st.suffix_bs.mean()))
+        assert rates[0] >= rates[1] >= rates[3] - 1e-9
+        if need_big_drop:
+            assert rates[3] < 0.5 * max(rates[0], 1e-9) or rates[0] == 0

@@ -1,0 +1,63 @@
+"""Key codec properties: order preservation is the §3.6 cornerstone."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import keys as K
+
+
+@given(st.lists(st.integers(0, 2**64 - 1), min_size=2, max_size=50))
+def test_uint64_order_preserving(xs):
+    enc = K.encode_uint64(np.asarray(xs, dtype=np.uint64))
+    order_int = np.argsort(np.asarray(xs, dtype=np.uint64), kind="stable")
+    rows = [bytes(e) for e in enc]
+    order_bytes = sorted(range(len(rows)), key=lambda i: (rows[i], i))
+    assert list(order_int) == order_bytes
+
+
+@given(st.lists(st.integers(-2**63, 2**63 - 1), min_size=2, max_size=50))
+def test_int64_signflip_order_preserving(xs):
+    enc = K.encode_int64(np.asarray(xs, dtype=np.int64))
+    rows = [bytes(e) for e in enc]
+    order_int = sorted(range(len(xs)), key=lambda i: (xs[i], i))
+    order_bytes = sorted(range(len(rows)), key=lambda i: (rows[i], i))
+    assert order_int == order_bytes
+
+
+@given(st.integers(0, 2**64 - 1))
+def test_uint64_roundtrip(x):
+    assert int(K.decode_uint64(K.encode_uint64(x))) == x
+
+
+@given(st.lists(st.binary(min_size=0, max_size=12), min_size=1,
+                max_size=40, unique=True))
+def test_lex_sort_matches_python(keys):
+    ks = K.make_keyset(keys, max_key_len=12)
+    idx = K.lex_sort_indices(ks)
+    got = [keys[i] for i in idx]
+    assert got == sorted(keys)
+
+
+@given(st.lists(st.binary(min_size=1, max_size=10), min_size=2, max_size=20))
+def test_compare_padded_matches_python(keys):
+    ks = K.make_keyset(keys, max_key_len=10)
+    n = len(keys)
+    a = ks.bytes[:, None, :].repeat(n, 1).reshape(n * n, -1)
+    al = ks.lens[:, None].repeat(n, 1).reshape(-1)
+    b = np.tile(ks.bytes, (n, 1))
+    bl = np.tile(ks.lens, n)
+    c = K.compare_padded(a, al, b, bl).reshape(n, n)
+    for i in range(n):
+        for j in range(n):
+            want = (keys[i] > keys[j]) - (keys[i] < keys[j])
+            assert c[i, j] == want
+
+
+def test_tags_deterministic_and_spread(rng):
+    keys = [bytes(rng.integers(0, 256, size=rng.integers(1, 16),
+                               dtype=np.uint8)) for _ in range(512)]
+    ks = K.make_keyset(list(dict.fromkeys(keys)), 16)
+    t1 = K.fnv1a_tags(ks.bytes, ks.lens)
+    t2 = K.fnv1a_tags(ks.bytes, ks.lens)
+    assert (t1 == t2).all()
+    # fingerprints should use most of the byte range
+    assert len(np.unique(t1)) > 64

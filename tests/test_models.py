@@ -1,0 +1,125 @@
+"""Per-arch smoke tests (reduced configs): forward/train-step shapes, no
+NaNs, prefill/decode vs teacher-forced forward."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, smoke_batch
+from repro.models import lm
+from repro.models.layers import softmax_xent
+from repro.train.optim import OptConfig
+from repro.train.train_step import init_state, make_train_step
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_no_nan(arch):
+    cfg = get_config(arch, smoke=True)
+    p = lm.init_params(cfg, jax.random.PRNGKey(0))
+    batch = smoke_batch(cfg, B=2, S=24)
+    logits, aux, h = lm.forward(p, cfg, batch)
+    S_out = batch["tokens"].shape[1] + (cfg.n_patches if cfg.family == "vlm"
+                                        else 0)
+    assert logits.shape == (2, S_out, cfg.vocab)
+    assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
+    P = cfg.n_patches if cfg.family == "vlm" else 0
+    loss = softmax_xent(logits[:, P:-1], batch["tokens"][:, 1:])
+    assert 4.0 < float(loss) < 9.0      # ~ln(512)=6.24 at init
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_decreases_loss(arch):
+    cfg = get_config(arch, smoke=True)
+    ocfg = OptConfig(lr=5e-3, warmup=1, total_steps=50)
+    state = init_state(cfg, ocfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, ocfg))
+    batch = smoke_batch(cfg, B=2, S=16)
+    batch = {k: jnp.asarray(v) for k, v in batch.items()}
+    losses = []
+    for _ in range(8):                  # overfit one tiny batch
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+        assert not jnp.isnan(m["loss"]), arch
+    assert losses[-1] < losses[0], losses
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_matches_forward(arch):
+    cfg = get_config(arch, smoke=True)
+    if cfg.n_experts:                   # capacity drops never fire ->
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)  # exact match
+    p = lm.init_params(cfg, jax.random.PRNGKey(0))
+    batch = smoke_batch(cfg, B=2, S=24)
+    toks = batch["tokens"]
+    P = cfg.n_patches if cfg.family == "vlm" else 0
+    logits, _, _ = lm.forward(p, cfg, batch)
+    b2 = dict(batch, tokens=toks[:, :20])
+    pl, cache = lm.prefill(p, cfg, b2, S_max=32)
+    assert float(jnp.abs(pl - logits[:, P + 19]).max()) < 0.15
+    for t in range(20, 24):
+        pos = jnp.full((2,), t + P, jnp.int32)
+        dl, cache = lm.decode_step(p, cfg, toks[:, t], pos, cache)
+        err = float(jnp.abs(dl - logits[:, P + t]).max())
+        assert err < 0.15, (arch, t, err)
+
+
+def test_param_counts_match_eval_shape():
+    """config.param_count() vs actual tree size (tolerance: small norms)."""
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        sds = jax.eval_shape(lambda c=cfg: lm.init_params(
+            c, jax.random.PRNGKey(0)))
+        import math
+        actual = sum(math.prod(l.shape)
+                     for l in jax.tree_util.tree_leaves(sds))
+        declared, _ = cfg.param_count()
+        rel = abs(actual - declared) / actual
+        assert rel < 0.06, (arch, actual, declared, rel)
+
+
+def test_moe_scatter_matches_gshard():
+    import numpy as np
+    from repro.models import moe as MOE
+    cfg = get_config("deepseek-v3-671b", smoke=True, capacity_factor=8.0)
+    key = jax.random.PRNGKey(1)
+    p = MOE.moe_params(key, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 16, cfg.d_model),
+                          jnp.float32).astype(cfg.dtype)
+    y1, a1 = MOE.moe_scatter(p, cfg, x)
+    y2, a2 = MOE.moe_gshard(p, cfg, x)
+    assert float(jnp.abs(y1.astype(jnp.float32)
+                         - y2.astype(jnp.float32)).max()) < 1e-2
+
+
+def test_mamba_chunked_invariance():
+    """mamba forward must not depend on chunk size (scan correctness)."""
+    from repro.models import mamba as M
+    cfg = get_config("falcon-mamba-7b", smoke=True)
+    p = M.mamba1_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model),
+                          jnp.float32).astype(cfg.dtype)
+    y1, s1 = M.mamba1_forward(p, cfg, x, chunk=8)
+    y2, s2 = M.mamba1_forward(p, cfg, x, chunk=64)
+    assert float(jnp.abs(y1.astype(jnp.float32)
+                         - y2.astype(jnp.float32)).max()) < 2e-2
+    cfg2 = get_config("zamba2-7b", smoke=True)
+    p2 = M.mamba2_params(jax.random.PRNGKey(0), cfg2)
+    x2 = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg2.d_model),
+                           jnp.float32).astype(cfg2.dtype)
+    z1, _ = M.mamba2_forward(p2, cfg2, x2, chunk=8)
+    z2, _ = M.mamba2_forward(p2, cfg2, x2, chunk=32)
+    assert float(jnp.abs(z1.astype(jnp.float32)
+                         - z2.astype(jnp.float32)).max()) < 2e-2
+
+
+def test_flash_attention_matches_small():
+    import repro.models.attention as A
+    q = jax.random.normal(jax.random.PRNGKey(0), (2, 200, 4, 16))
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 200, 2, 16))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 200, 2, 16))
+    for spec in (A.MaskSpec("causal"), A.MaskSpec("full"),
+                 A.MaskSpec("causal", 32, 0), A.MaskSpec("causal", 0, 13)):
+        ref = A._sdpa_small(q, k, v, spec, 2)
+        got = A._sdpa_flash(q, k, v, spec, 2, q_chunk=64, kv_chunk=48)
+        assert float(jnp.abs(ref - got).max()) < 1e-4, spec

@@ -1,0 +1,95 @@
+"""Extra hypothesis property suites across subsystem invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.models.attention import MaskSpec, _sdpa_flash, _sdpa_small
+
+
+@settings(deadline=None, max_examples=12,
+          suppress_health_check=list(HealthCheck))
+@given(st.integers(8, 96), st.integers(8, 96), st.sampled_from([1, 2, 4]),
+       st.sampled_from([8, 16]), st.booleans(), st.integers(0, 24),
+       st.integers(0, 2**31 - 1))
+def test_flash_equals_exact_attention(S, T, n_rep, hd, causal, window, seed):
+    """Online-softmax tiling is exact for arbitrary shapes/masks (rows with
+    at least one valid key)."""
+    if causal and T < S:
+        T = S          # avoid degenerate all-masked rows
+    rng = np.random.default_rng(seed)
+    Hk = 2
+    q = jnp.asarray(rng.standard_normal((1, S, Hk * n_rep, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, T, Hk, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, T, Hk, hd)), jnp.float32)
+    spec = MaskSpec("causal" if causal else "full",
+                    window if causal and window >= 8 else 0, 0)
+    ref = _sdpa_small(q, k, v, spec, n_rep)
+    got = _sdpa_flash(q, k, v, spec, n_rep, q_chunk=32, kv_chunk=16)
+    assert float(jnp.abs(ref - got).max()) < 2e-4
+
+
+@settings(deadline=None, max_examples=15,
+          suppress_health_check=list(HealthCheck))
+@given(st.integers(1, 64), st.integers(1, 7), st.integers(0, 2**31 - 1))
+def test_data_stream_shard_factorizations_agree(batch_mult, step, seed):
+    """Any shard factorization reassembles the identical global batch."""
+    from repro.train.data import DataConfig, TokenStream
+    B = 8 * max(1, batch_mult % 4)
+    dc = DataConfig(vocab=512, global_batch=B, seq_len=32, seed=seed)
+    s = TokenStream(dc)
+    full = s.batch_at(step)["tokens"]
+    for n_shards in (1, 2, 4, 8):
+        if B % n_shards:
+            continue
+        parts = [s.shard_batch_at(step, i, n_shards)["tokens"]
+                 for i in range(n_shards)]
+        assert (np.concatenate(parts) == full).all()
+
+
+@settings(deadline=None, max_examples=10,
+          suppress_health_check=list(HealthCheck))
+@given(st.lists(st.integers(-2**63, 2**63 - 1), min_size=2, max_size=64,
+                unique=True))
+def test_signed_int_tree_order(xs):
+    """§3.6 sign-flip codec: the tree's range scan returns signed ints in
+    true signed order."""
+    from repro.core import batch_ops as B
+    from repro.core import keys as K
+    from repro.core.fbtree import TreeConfig, bulk_build
+    enc = [K.encode_int64(x).tobytes() for x in xs]
+    ks = K.make_keyset(enc, 8)
+    cfg = TreeConfig.plan(max_keys=4 * len(xs), key_width=8)
+    t = bulk_build(cfg, ks, np.arange(len(xs), dtype=np.int32))
+    lo = K.make_keyset([K.encode_int64(min(xs)).tobytes()], 8)
+    kid, val, emitted, _ = B.range_scan(t, lo.bytes, lo.lens,
+                                        max_items=len(xs))
+    got_rows = np.asarray(t.arrays.key_bytes)[np.asarray(kid[0][:int(emitted[0])])]
+    got = (K.decode_uint64(got_rows[:, :8]).astype(np.uint64)
+           ^ np.uint64(1 << 63)).view(np.int64)
+    assert list(got) == sorted(xs)
+
+
+@settings(deadline=None, max_examples=10,
+          suppress_health_check=list(HealthCheck))
+@given(st.integers(2, 6), st.integers(1, 3), st.integers(0, 2**31 - 1))
+def test_mamba2_state_handoff(n_chunks, tail, seed):
+    """SSD chunked forward == processing the sequence in two halves with
+    explicit state handoff (the prefill→decode contract)."""
+    import dataclasses
+    from repro.configs import get_config
+    from repro.models import mamba as M
+    cfg = get_config("zamba2-7b", smoke=True)
+    S = 16 * n_chunks
+    cut = 16 * (n_chunks - tail) if n_chunks > tail else 16
+    rng = np.random.default_rng(seed)
+    p = M.mamba2_params(jax.random.PRNGKey(seed % 7), cfg)
+    x = jnp.asarray(rng.standard_normal((1, S, cfg.d_model)),
+                    jnp.float32).astype(cfg.dtype)
+    y_full, st_full = M.mamba2_forward(p, cfg, x, chunk=16)
+    y1, st1 = M.mamba2_forward(p, cfg, x[:, :cut], chunk=16)
+    y2, st2 = M.mamba2_forward(p, cfg, x[:, cut:], state=st1, chunk=16)
+    ycat = jnp.concatenate([y1, y2], axis=1)
+    err = float(jnp.abs(ycat.astype(jnp.float32)
+                        - y_full.astype(jnp.float32)).max())
+    assert err < 3e-2, err

@@ -1,0 +1,114 @@
+"""Sharding rules: divisibility-aware parameter/cache specs (AbstractMesh —
+no devices needed)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.parallel import sharding as SH
+from repro.train import optim as O
+
+MESH = AbstractMesh((16, 16), ("data", "model"))
+MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def spec(path, shape, mesh=MESH):
+    s = SH.param_spec(path, shape, mesh)
+    return SH._validate(s, shape, mesh)
+
+
+def test_embed_vocab_parallel_when_divisible():
+    assert spec("embed", (152064, 5120)) == P("model", None)
+    # whisper vocab 51865 is NOT divisible by 16 -> replicate
+    assert spec("embed", (51865, 1024)) == P(None, None)
+
+
+def test_attention_head_sharding_divisibility():
+    # 48 heads shard; 40 heads don't (GSPMD padding avoided on inputs)
+    assert spec("seg0/attn/wq", (32, 6144, 48, 128)) == \
+        P(None, None, "model", None)
+    assert spec("seg0/attn/wq", (48, 5120, 40, 128)) == \
+        P(None, None, None, None)
+    # kv=8 on tp=16 -> replicated
+    assert spec("seg0/attn/wk", (48, 5120, 8, 128)) == \
+        P(None, None, None, None)
+
+
+def test_mlp_and_moe_specs():
+    assert spec("seg0/mlp/wi", (48, 5120, 13824)) == P(None, None, "model")
+    assert spec("seg0/mlp/wo", (48, 13824, 5120)) == P(None, "model", None)
+    assert spec("seg1/moe/wi", (58, 256, 7168, 2048)) == \
+        P(None, "model", None, None)
+    assert spec("seg1/moe/router", (58, 7168, 256)) == P(None, None, None)
+
+
+def test_mamba_specs():
+    assert spec("seg0/mixer/in_proj", (64, 4096, 16384)) == \
+        P(None, None, "model")
+    assert spec("seg0/mixer/out_proj", (64, 8192, 4096)) == \
+        P(None, "model", None)
+    assert spec("seg0/mixer/A_log", (64, 8192, 16)) == P(None, None, None)
+
+
+def test_cache_spec_kv_vs_seq_sharding():
+    # kv=16 divisible -> shard kv heads
+    s = SH.cache_spec("k", (24, 128, 32768, 16, 64), MESH)
+    assert s == P(None, ("data",), None, "model", None)
+    # kv=8 not divisible -> shard sequence (flash-decoding style)
+    s = SH.cache_spec("k", (48, 128, 32768, 8, 128), MESH)
+    assert s == P(None, ("data",), "model", None, None)
+    # MLA latent cache: shard sequence
+    s = SH.cache_spec("ckv", (61, 128, 32768, 512), MESH)
+    assert s == P(None, ("data",), "model", None)
+
+
+def test_all_arch_param_shardings_build():
+    for arch in ("qwen3-14b", "deepseek-v3-671b", "zamba2-7b",
+                 "whisper-medium", "falcon-mamba-7b"):
+        cfg = get_config(arch)
+        sds = jax.eval_shape(lambda c=cfg: lm.init_params(
+            c, jax.random.PRNGKey(0)))
+        shardings = SH.param_shardings(sds, MESH3)
+        for (path, leaf), sh in zip(
+                jax.tree_util.tree_flatten_with_path(sds)[0],
+                jax.tree_util.tree_leaves(shardings)):
+            for e, n in zip(sh.spec, leaf.shape):
+                if e is None:
+                    continue
+                names = e if isinstance(e, tuple) else (e,)
+                k = 1
+                for nm in names:
+                    k *= dict(zip(MESH3.axis_names, MESH3.axis_sizes))[nm]
+                assert n % k == 0, (arch, path, leaf.shape, sh.spec)
+
+
+def test_zero_spec_adds_data_axis():
+    z = O.zero_spec(P(None, "model"), (13824, 5120), MESH)
+    assert z == P("data", "model")
+    # dim not divisible -> untouched
+    z = O.zero_spec(P(), (7,), MESH)
+    assert all(e is None for e in z)   # dim not divisible -> untouched
+
+
+def test_sharded_params_fraction():
+    """TP must actually shard the big weights: per-device bytes ≤ ~1/8 of
+    total for a TP-16 dense model (attention may replicate)."""
+    cfg = get_config("yi-9b")     # H=32, kv=4, ff 11008=16*688
+    sds = jax.eval_shape(lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
+    shardings = SH.param_shardings(sds, MESH)
+    total = per_dev = 0
+    for (path, leaf), sh in zip(
+            jax.tree_util.tree_flatten_with_path(sds)[0],
+            jax.tree_util.tree_leaves(shardings)):
+        n = int(np.prod(leaf.shape))
+        k = 1
+        for e in sh.spec:
+            if e is not None:
+                names = e if isinstance(e, tuple) else (e,)
+                for nm in names:
+                    k *= dict(zip(MESH.axis_names, MESH.axis_sizes))[nm]
+        total += n
+        per_dev += n // k
+    assert per_dev / total < 0.15, per_dev / total

@@ -1,0 +1,170 @@
+"""Training substrate: optimizers, schedule, clipping, compression,
+checkpointing, data determinism, restartable loop."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.parallel import compression as C
+from repro.train import checkpoint as CK
+from repro.train import ft
+from repro.train.data import DataConfig, TokenStream
+from repro.train import optim as O
+from repro.train.train_step import init_state, make_train_step
+
+
+def test_schedule_warmup_and_cosine():
+    cfg = O.OptConfig(lr=1.0, warmup=10, total_steps=110, min_lr_frac=0.1)
+    assert float(O.schedule(cfg, jnp.int32(0))) == 0.0
+    assert abs(float(O.schedule(cfg, jnp.int32(10))) - 1.0) < 1e-6
+    end = float(O.schedule(cfg, jnp.int32(110)))
+    assert abs(end - 0.1) < 1e-6
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 3.0), "b": jnp.full((4,), 4.0)}
+    clipped, gn = O.clip_by_global_norm(g, 1.0)
+    assert abs(float(gn) - 10.0) < 1e-5
+    total = jnp.sqrt(sum(jnp.sum(x * x) for x in
+                         jax.tree_util.tree_leaves(clipped)))
+    assert abs(float(total) - 1.0) < 1e-5
+
+
+@pytest.mark.parametrize("kind", ["adamw", "adafactor"])
+def test_optimizer_reduces_quadratic(kind):
+    cfg = O.OptConfig(kind=kind, lr=0.1, warmup=1, total_steps=200,
+                      weight_decay=0.0)
+    params = {"w": jnp.array([[5.0, -3.0], [2.0, 8.0]])}
+    state = O.opt_init(cfg, params)
+    for _ in range(100):
+        grads = {"w": 2 * params["w"]}
+        params, state, m = O.opt_update(cfg, params, grads, state)
+    assert float(jnp.abs(params["w"]).max()) < 1.0
+
+
+def test_compression_error_feedback_unbiased():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal(1000).astype(np.float32))
+    eb = jnp.zeros_like(g)
+    acc_q = jnp.zeros_like(g)
+    acc = jnp.zeros_like(g)
+    for _ in range(50):
+        (q,), (eb,) = C.compress_grads_ef((g,), (eb,))
+        acc_q = acc_q + q
+        acc = acc + g
+    # error feedback: accumulated quantized grads track accumulated grads
+    rel = float(jnp.linalg.norm(acc_q - acc) / jnp.linalg.norm(acc))
+    assert rel < 0.02
+
+
+def test_quantize_roundtrip_bounded():
+    x = jnp.asarray(np.random.default_rng(1).standard_normal(777),
+                    dtype=jnp.float32)
+    q, s = C.quantize_int8(x)
+    y = C.dequantize_int8(q, s, x.shape)
+    assert float(jnp.abs(x - y).max()) <= float(s.max()) * 0.51 + 1e-6
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = get_config("yi-9b", smoke=True)
+    ocfg = O.OptConfig()
+    state = init_state(cfg, ocfg, jax.random.PRNGKey(0))
+    CK.save(str(tmp_path), 7, state)
+    template = jax.eval_shape(lambda: init_state(cfg, ocfg,
+                                                 jax.random.PRNGKey(0)))
+    restored, step = CK.restore(str(tmp_path), template)
+    assert step == 7
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(restored)):
+        assert np.allclose(np.asarray(a, np.float32),
+                           np.asarray(b, np.float32))
+
+
+def test_checkpoint_keep_k(tmp_path):
+    cfg = get_config("yi-9b", smoke=True)
+    state = {"x": jnp.zeros((3,))}
+    for s in (1, 2, 3, 4, 5):
+        CK.save(str(tmp_path), s, state, keep=2)
+    assert CK.latest_step(str(tmp_path)) == 5
+    dirs = sorted(os.listdir(tmp_path))
+    assert len([d for d in dirs if d.startswith("step_")]) == 2
+
+
+def test_data_deterministic_and_seekable():
+    dc = DataConfig(vocab=1000, global_batch=8, seq_len=64, seed=3)
+    s1 = TokenStream(dc)
+    s2 = TokenStream(dc)
+    b1 = s1.batch_at(17)
+    b2 = s2.batch_at(17)
+    assert (b1["tokens"] == b2["tokens"]).all()
+    # shard slices reassemble the global batch for ANY factorization
+    full = s1.batch_at(5)["tokens"]
+    for n_shards in (2, 4, 8):
+        parts = [s1.shard_batch_at(5, i, n_shards)["tokens"]
+                 for i in range(n_shards)]
+        assert (np.concatenate(parts) == full).all()
+
+
+def test_run_with_restarts_recovers(tmp_path):
+    """Injected failure -> restore from checkpoint -> finish all steps."""
+    cfg = get_config("yi-9b", smoke=True)
+    ocfg = O.OptConfig(lr=1e-3, warmup=2, total_steps=12)
+    data = TokenStream(DataConfig(vocab=cfg.vocab, global_batch=2,
+                                  seq_len=16, seed=0), cfg)
+    step_fn = jax.jit(make_train_step(cfg, ocfg))
+    box = {}
+    plan = ft.FailurePlan({6: "injected-node-loss"})
+
+    def make_runner(start):
+        if CK.latest_step(str(tmp_path)) is not None:
+            template = jax.eval_shape(
+                lambda: init_state(cfg, ocfg, jax.random.PRNGKey(0)))
+            box["state"], _ = CK.restore(str(tmp_path), template)
+        else:
+            box["state"] = init_state(cfg, ocfg, jax.random.PRNGKey(0))
+
+        def run(step):
+            plan.check(step)
+            b = {k: jnp.asarray(v) for k, v in data.batch_at(step).items()}
+            box["state"], m = step_fn(box["state"], b)
+            return float(m["loss"])
+        return run
+
+    log = ft.run_with_restarts(
+        12, make_runner, save_every=4,
+        saver=lambda s: CK.save(str(tmp_path), s, box["state"]),
+        restorer=lambda: CK.latest_step(str(tmp_path)) or 0)
+    assert len(log["restarts"]) == 1
+    assert max(log["losses"]) > 0
+    assert sorted(log["losses"])[-1] == 11
+
+
+def test_watchdog_flags_straggler():
+    wd = ft.Watchdog(window=16, z_thresh=4.0)
+    for i in range(20):
+        wd.observe(i, 1.0 + 0.01 * (i % 3))
+    assert wd.observe(20, 5.0)
+    assert wd.stragglers[-1]["step"] == 20
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    cfg = get_config("yi-9b", smoke=True)
+    ocfg = O.OptConfig(lr=1e-3, warmup=1, total_steps=10)
+    state1 = init_state(cfg, ocfg, jax.random.PRNGKey(0))
+    state2 = jax.tree_util.tree_map(lambda x: x, state1)
+    data = TokenStream(DataConfig(vocab=cfg.vocab, global_batch=4,
+                                  seq_len=16, seed=0), cfg)
+    b = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+    s1 = make_train_step(cfg, ocfg, n_micro=1)
+    s2 = make_train_step(cfg, ocfg, n_micro=2)
+    out1, m1 = s1(state1, b)
+    out2, m2 = s2(state2, b)
+    for a, bb in zip(jax.tree_util.tree_leaves(out1["params"]),
+                     jax.tree_util.tree_leaves(out2["params"])):
+        assert np.allclose(np.asarray(a, np.float32),
+                           np.asarray(bb, np.float32), atol=2e-2), \
+            "microbatched step diverged from full batch"

@@ -1,0 +1,131 @@
+"""FB+-tree batched ops vs a python dict oracle (randomized + hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import batch_ops as B
+from repro.core import keys as K
+from repro.core.fbtree import TreeConfig, bulk_build
+
+KW = 12
+
+
+def build(keys, vals, cap=None):
+    ks = K.make_keyset(keys, KW)
+    cfg = TreeConfig.plan(max_keys=cap or max(64, 4 * len(keys)), key_width=KW)
+    return bulk_build(cfg, ks, np.asarray(vals, np.int32))
+
+
+def lookup_all(tree, keys):
+    ks = K.make_keyset(keys, KW)
+    vals, rep = B.lookup_batch(tree, ks.bytes, ks.lens)
+    return np.asarray(vals), np.asarray(rep.found)
+
+
+@settings(deadline=None, max_examples=20,
+          suppress_health_check=list(HealthCheck))
+@given(st.sets(st.binary(min_size=1, max_size=KW), min_size=1, max_size=200))
+def test_bulk_build_lookup(keyset):
+    keys = sorted(keyset)
+    vals = np.arange(len(keys), dtype=np.int32)
+    t = build(keys, vals)
+    got, found = lookup_all(t, keys)
+    assert found.all()
+    assert (got == vals).all()
+    missing = [k + b"\xff" for k in keys if len(k) < KW][:50]
+    if missing:
+        missing = [m for m in missing if m not in keyset]
+        if missing:
+            _, f2 = lookup_all(t, missing)
+            assert not f2.any()
+
+
+@settings(deadline=None, max_examples=10,
+          suppress_health_check=list(HealthCheck))
+@given(st.data())
+def test_mixed_ops_vs_oracle(data):
+    universe = [bytes([a, b]) for a in range(16, 48) for b in range(4)]
+    init = data.draw(st.sets(st.sampled_from(universe), min_size=4,
+                             max_size=40))
+    keys = sorted(init)
+    oracle = {k: i for i, k in enumerate(keys)}
+    t = build(keys, list(oracle.values()), cap=1024)
+    for _ in range(3):
+        batch = data.draw(st.lists(st.sampled_from(universe), min_size=1,
+                                   max_size=32))
+        op = data.draw(st.sampled_from(["insert", "update", "remove"]))
+        ks = K.make_keyset(batch, KW)
+        vals = np.arange(len(batch), dtype=np.int32) + 1000
+        if op == "insert":
+            t, rep, _ = B.insert_batch(t, ks.bytes, ks.lens, vals)
+            for i, k in enumerate(batch):
+                oracle[k] = int(vals[i])   # later op in batch wins ties:
+            # dedupe_last_wins: highest seq wins => python dict order matches
+        elif op == "update":
+            t, rep = B.update_batch(t, ks.bytes, ks.lens, vals)
+            for i, k in enumerate(batch):
+                if k in oracle:
+                    oracle[k] = int(vals[i])
+        else:
+            t, rep = B.remove_batch(t, ks.bytes, ks.lens)
+            for k in batch:
+                oracle.pop(k, None)
+        got, found = lookup_all(t, universe)
+        for i, k in enumerate(universe):
+            if k in oracle:
+                assert found[i], f"lost key {k!r} after {op}"
+                assert got[i] == oracle[k], f"wrong val for {k!r}"
+            else:
+                assert not found[i], f"phantom key {k!r}"
+
+
+def test_insert_monotone_append(rng):
+    """Monotone insert pattern (worst case for rightmost-leaf funneling)."""
+    keys = [int(x) for x in range(0, 2000, 2)]
+    t = build(keys[:100], np.arange(100), cap=8192)
+    ks = K.make_keyset(keys[100:], KW)
+    t, rep, rounds = B.insert_batch(t, ks.bytes, ks.lens,
+                                    np.arange(100, 1000, dtype=np.int32))
+    got, found = lookup_all(t, keys)
+    assert found.all()
+
+
+def test_range_scan_vs_sorted(rng):
+    ints = rng.choice(2**32, size=800, replace=False)
+    keys = [int(x) for x in ints]
+    t = build(keys, np.arange(800))
+    srt = np.sort(ints.astype(np.uint64))
+    starts = [int(srt[i]) for i in (0, 100, 700, 795)]
+    sks = K.make_keyset(starts, KW)
+    kid, val, emitted, _ = B.range_scan(t, sks.bytes, sks.lens, max_items=24)
+    kb = np.asarray(t.arrays.key_bytes)
+    for i, s in enumerate(starts):
+        expect = srt[srt >= s][:24]
+        n = int(emitted[i])
+        assert n == len(expect)
+        got = K.decode_uint64(kb[np.asarray(kid[i][:n])][:, :8])
+        assert (got == expect).all()
+
+
+def test_version_semantics():
+    """Insert/remove bump leaf versions; update does not (paper §4.2)."""
+    keys = [int(x) for x in range(200)]
+    t = build(keys, np.arange(200), cap=2048)
+    v0 = np.asarray(t.arrays.leaf_version).copy()
+    ks = K.make_keyset(keys[:50], KW)
+    t2, _ = B.update_batch(t, ks.bytes, ks.lens,
+                           np.arange(50, dtype=np.int32))
+    assert (np.asarray(t2.arrays.leaf_version) == v0).all()
+    t3, _ = B.remove_batch(t2, ks.bytes, ks.lens)
+    assert np.asarray(t3.arrays.leaf_version).sum() > v0.sum()
+
+
+def test_capacity_error_raises():
+    keys = [int(x) for x in range(60)]
+    ks = K.make_keyset(keys, KW)
+    cfg = TreeConfig.plan(max_keys=64, key_width=KW)
+    t = bulk_build(cfg, ks, np.arange(60, dtype=np.int32))
+    big = K.make_keyset([int(x) for x in range(100, 400)], KW)
+    with pytest.raises(RuntimeError):
+        B.insert_batch(t, big.bytes, big.lens,
+                       np.arange(300, dtype=np.int32))
