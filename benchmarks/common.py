@@ -18,6 +18,7 @@ import numpy as np
 from repro.core import batch_ops as B
 from repro.core import keys as K
 from repro.core.fbtree import FBTree, TreeConfig, bulk_build
+from repro.core.traverse import TraversalEngine, available_backends  # noqa: F401
 
 SYLL = ["an", "ber", "co", "del", "er", "fo", "gra", "hu", "in", "jo",
         "ka", "lo", "mi", "nor", "ol", "pe", "qua", "ro", "sa", "tu"]
@@ -68,12 +69,22 @@ def make_dataset(name: str, n: int, seed: int = 7) -> Tuple[List, int]:
 DATASETS = ("rand-int", "3-gram", "ycsb", "twitter", "url")
 
 
-def build_tree(keys, width, fs: int = 4, ns: int = 64) -> Tuple[FBTree, K.KeySet]:
+def build_tree(keys, width, fs: int = 4, ns: int = 64,
+               stacked: bool = False) -> Tuple[FBTree, K.KeySet]:
     ks = K.make_keyset(keys, width)
     cfg = TreeConfig.plan(max_keys=int(len(keys) * 2.5), key_width=width,
-                          fs=fs, ns=ns)
+                          fs=fs, ns=ns, stacked=stacked)
     vals = np.arange(len(keys), dtype=np.int32)
     return bulk_build(cfg, ks, vals), ks
+
+
+def make_engine(backend: str = "jnp", layout: str = None) -> TraversalEngine:
+    """CLI-facing engine selector: turns constructor validation errors into
+    a clean SystemExit before a long benchmark run starts."""
+    try:
+        return TraversalEngine(backend=backend, layout=layout)
+    except ValueError as e:
+        raise SystemExit(f"bad --backend/--layout: {e}")
 
 
 def zipf_indices(rng, n_keys: int, n_ops: int, theta: float) -> np.ndarray:

@@ -16,13 +16,14 @@ from repro.core import keys as K
 from repro.core.baseline import lookup_variant
 from repro.core.fbtree import TreeConfig, bulk_build
 
-from .common import build_tree, make_dataset, timed, zipf_indices
+from .common import build_tree, make_dataset, make_engine, timed, zipf_indices
 
 STEPS = ("base", "+prefix", "+feature2", "+feature4", "+hashtag")
 
 
 def run(datasets=("3-gram", "ycsb", "twitter", "url"), n_keys=20_000,
-        n_ops=16_384, seed=13) -> List[Dict]:
+        n_ops=16_384, seed=13, backend="jnp", layout=None) -> List[Dict]:
+    engine = make_engine(backend, layout)
     rows = []
     rng = np.random.default_rng(seed)
     for ds in datasets:
@@ -32,7 +33,8 @@ def run(datasets=("3-gram", "ycsb", "twitter", "url"), n_keys=20_000,
         qb, ql = jnp.asarray(ks.bytes[idx]), jnp.asarray(ks.lens[idx])
         trees = {}
         for fs in (2, 4):
-            cfg = TreeConfig.plan(max_keys=2 * n_keys, key_width=width, fs=fs)
+            cfg = TreeConfig.plan(max_keys=2 * n_keys, key_width=width, fs=fs,
+                                  stacked=(layout == "stacked"))
             trees[fs] = bulk_build(cfg, ks, np.arange(n_keys, dtype=np.int32))
         plan = [("base", trees[4], "base"),
                 ("+prefix", trees[4], "prefix"),
@@ -45,14 +47,15 @@ def run(datasets=("3-gram", "ycsb", "twitter", "url"), n_keys=20_000,
                 for off in range(0, n_ops, 4096):
                     f, v, st, ls = lookup_variant(tree, qb[off:off + 4096],
                                                   ql[off:off + 4096],
-                                                  variant=variant)
+                                                  variant=variant,
+                                                  engine=engine)
                     outs.append(v)
                 return outs
             t = timed(fn)
             _, _, st, ls = lookup_variant(tree, qb[:4096], ql[:4096],
-                                          variant=variant)
+                                          variant=variant, engine=engine)
             rows.append({
-                "dataset": ds, "step": label,
+                "dataset": ds, "step": label, "backend": backend,
                 "Mops": round(n_ops / t / 1e6, 3),
                 "key_cmp/op": round(float(st.key_compares.mean()), 2),
                 "lines/op": round(float(st.lines_touched.mean()), 1),
@@ -61,5 +64,5 @@ def run(datasets=("3-gram", "ycsb", "twitter", "url"), n_keys=20_000,
     return rows
 
 
-COLUMNS = ["dataset", "step", "Mops", "key_cmp/op", "lines/op",
+COLUMNS = ["dataset", "step", "backend", "Mops", "key_cmp/op", "lines/op",
            "suffix_bs/op"]

@@ -1,8 +1,12 @@
 """Benchmark driver: one module per paper table/figure.
 
   PYTHONPATH=src python -m benchmarks.run [--fast] [--only ycsb,...]
+      [--backend {jnp,pallas,...}] [--layout {tuple,stacked}]
 
-Writes CSVs under out/bench/ and prints each table.
+``--backend``/``--layout`` select the traversal engine for the suites that
+descend the tree (ycsb, factor, traverse). The ``traverse`` suite A/Bs all
+backend×layout combinations regardless and writes ``BENCH_traverse.json``
+at the repo root. Writes CSVs under out/bench/ and prints each table.
 """
 from __future__ import annotations
 
@@ -13,19 +17,26 @@ import sys
 import time
 
 from . import (contention, factor_analysis, feature_size,
-               hardware_counters, memory, roofline_table, scan, ycsb)
+               hardware_counters, memory, roofline_table, scan,
+               traverse_bench, ycsb)
 from .common import fmt_table
 
 SUITES = {
     "ycsb": ("Fig.11/17 — YCSB core workloads",
-             lambda fast: ycsb.run(n_keys=8_000 if fast else 20_000,
-                                   n_ops=8_192 if fast else 40_960),
+             lambda fast, **eng: ycsb.run(n_keys=8_000 if fast else 20_000,
+                                          n_ops=8_192 if fast else 40_960,
+                                          **eng),
              ycsb.COLUMNS),
     "factor": ("Fig.12a — structural factor analysis",
-               lambda fast: factor_analysis.run(
+               lambda fast, **eng: factor_analysis.run(
                    n_keys=8_000 if fast else 20_000,
-                   n_ops=8_192 if fast else 16_384),
+                   n_ops=8_192 if fast else 16_384, **eng),
                factor_analysis.COLUMNS),
+    "traverse": ("Engine A/B — traversal backends × layouts",
+                 lambda fast, **eng: traverse_bench.run(
+                     n_keys=8_000 if fast else 20_000,
+                     n_ops=8_192 if fast else 16_384),
+                 traverse_bench.COLUMNS),
     "memory": ("Fig.12b — index memory consumption",
                lambda fast: memory.run(n_keys=8_000 if fast else 20_000),
                memory.COLUMNS),
@@ -56,19 +67,30 @@ SUITES = {
 }
 
 
+# suites that accept traversal-engine selection
+_ENGINE_SUITES = ("ycsb", "factor")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", default=None)
     ap.add_argument("--out", default="out/bench")
+    ap.add_argument("--backend", default="jnp",
+                    help="traversal branch backend (jnp, pallas, ...)")
+    ap.add_argument("--layout", default=None, choices=(None, "tuple",
+                                                       "stacked"),
+                    help="descent layout (default: tree config)")
     args = ap.parse_args(argv)
     names = args.only.split(",") if args.only else list(SUITES)
     os.makedirs(args.out, exist_ok=True)
     for name in names:
         title, fn, cols = SUITES[name]
+        eng = (dict(backend=args.backend, layout=args.layout)
+               if name in _ENGINE_SUITES else {})
         t0 = time.time()
         try:
-            rows = fn(args.fast)
+            rows = fn(args.fast, **eng)
         except Exception as e:  # keep the suite running
             print(f"\n== {name}: FAILED — {type(e).__name__}: {e}",
                   flush=True)
@@ -83,6 +105,8 @@ def main(argv=None):
             w = csv.DictWriter(f, fieldnames=cols, extrasaction="ignore")
             w.writeheader()
             w.writerows(rows)
+        if name == "traverse":
+            print("engine A/B written to", traverse_bench.write_json(rows))
     print("\nCSV written to", args.out)
 
 

@@ -1,0 +1,80 @@
+"""Traversal engine A/B: backends (jnp vs pallas-interpret) × layouts
+(tuple vs stacked) on identical trees and query streams.
+
+Cross-checks that every combination returns identical leaf ids and
+machine-independent counters (``key_compares``, ``suffix_bs``,
+``feat_rounds``) — the engine contract — then reports relative lookup
+throughput. Results also land in ``BENCH_traverse.json`` at the repo root
+so the perf trajectory of future kernel PRs starts here.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import batch_ops as B
+from repro.core.traverse import TraversalEngine
+
+from .common import build_tree, make_dataset, timed, zipf_indices
+
+COMBOS = [("jnp", "tuple"), ("jnp", "stacked"),
+          ("pallas", "tuple"), ("pallas", "stacked")]
+
+
+def run(datasets=("ycsb", "url"), n_keys=20_000, n_ops=16_384,
+        seed=23) -> List[Dict]:
+    rows = []
+    rng = np.random.default_rng(seed)
+    for ds in datasets:
+        keys, width = make_dataset(ds, n_keys)
+        tree, ks = build_tree(keys, width)
+        idx = zipf_indices(rng, len(keys), n_ops, 0.99)
+        qb, ql = jnp.asarray(ks.bytes[idx]), jnp.asarray(ks.lens[idx])
+        ref = None
+        for backend, layout in COMBOS:
+            eng = TraversalEngine(backend=backend, layout=layout)
+            def fn():
+                outs = []
+                for off in range(0, n_ops, 4096):
+                    v, rep = B.lookup_batch(tree, qb[off:off + 4096],
+                                            ql[off:off + 4096], engine=eng)
+                    outs.append(v)
+                return outs
+            t = timed(fn)
+            _, rep = B.lookup_batch(tree, qb[:4096], ql[:4096], engine=eng)
+            sig = (np.asarray(rep.found), np.asarray(rep.key_compares),
+                   np.asarray(rep.suffix_bs), np.asarray(rep.feat_rounds))
+            if ref is None:
+                ref = sig
+            else:
+                for a, b, nm in zip(ref, sig, ("found", "key_compares",
+                                               "suffix_bs", "feat_rounds")):
+                    assert (a == b).all(), \
+                        f"{ds}: {backend}/{layout} diverges on {nm}"
+            rows.append({
+                "dataset": ds, "backend": backend, "layout": layout,
+                "Mops": round(n_ops / t / 1e6, 3),
+                "key_cmp/op": round(float(rep.key_compares.mean()), 2),
+                "suffix_bs/op": round(float(rep.suffix_bs.mean()), 3),
+                "feat_rounds/op": round(float(rep.feat_rounds.mean()), 2),
+                "parity": "ok",
+            })
+    return rows
+
+
+COLUMNS = ["dataset", "backend", "layout", "Mops", "key_cmp/op",
+           "suffix_bs/op", "feat_rounds/op", "parity"]
+
+
+def write_json(rows: List[Dict], path: str = None) -> str:
+    if path is None:
+        path = os.path.join(os.path.dirname(os.path.dirname(__file__)),
+                            "BENCH_traverse.json")
+    with open(path, "w") as f:
+        json.dump({"suite": "traverse", "rows": rows}, f, indent=2)
+        f.write("\n")
+    return path

@@ -16,7 +16,7 @@ from repro.core import batch_ops as B
 from repro.core import keys as K
 from repro.core.baseline import lookup_variant
 
-from .common import (DATASETS, build_tree, make_dataset, timed,
+from .common import (DATASETS, build_tree, make_dataset, make_engine, timed,
                      zipf_indices)
 
 N_KEYS = 20_000
@@ -25,12 +25,14 @@ BATCH = 4096
 SKEW = 0.99
 
 
-def run(datasets=DATASETS, n_keys=N_KEYS, n_ops=N_OPS, seed=11) -> List[Dict]:
+def run(datasets=DATASETS, n_keys=N_KEYS, n_ops=N_OPS, seed=11,
+        backend="jnp", layout=None) -> List[Dict]:
+    engine = make_engine(backend, layout)
     rows = []
     rng = np.random.default_rng(seed)
     for ds in datasets:
         keys, width = make_dataset(ds, n_keys)
-        tree, ks = build_tree(keys, width)
+        tree, ks = build_tree(keys, width, stacked=(layout == "stacked"))
         idx = zipf_indices(rng, len(keys), n_ops, SKEW)
         qb = jnp.asarray(ks.bytes[idx])
         ql = jnp.asarray(ks.lens[idx])
@@ -46,7 +48,8 @@ def run(datasets=DATASETS, n_keys=N_KEYS, n_ops=N_OPS, seed=11) -> List[Dict]:
                 nb = jnp.asarray(fks.bytes[off:off + BATCH])
                 nl = jnp.asarray(fks.lens[off:off + BATCH])
                 out, _, _ = B.insert_batch(out, nb, nl,
-                                           jnp.arange(nb.shape[0]))
+                                           jnp.arange(nb.shape[0]),
+                                           engine=engine)
             return out.arrays.leaf_occ
         t_load = timed(load_fn, warmup=1, iters=2)
         row["LOAD_Mops"] = round(len(fresh) / t_load / 1e6, 3)
@@ -58,7 +61,7 @@ def run(datasets=DATASETS, n_keys=N_KEYS, n_ops=N_OPS, seed=11) -> List[Dict]:
                 for off in range(0, n_ops, BATCH):
                     f, val, st, ls = lookup_variant(
                         tree, qb[off:off + BATCH], ql[off:off + BATCH],
-                        variant=v)
+                        variant=v, engine=engine)
                     outs.append(val)
                 return outs
             t = timed(read_fn)
@@ -72,10 +75,10 @@ def run(datasets=DATASETS, n_keys=N_KEYS, n_ops=N_OPS, seed=11) -> List[Dict]:
             for off in range(0, n_ops, BATCH * 2):
                 f, val, _, _ = lookup_variant(
                     tree, qb[off:off + BATCH], ql[off:off + BATCH],
-                    variant="feature+hash")
+                    variant="feature+hash", engine=engine)
                 t2, _ = B.update_batch(t2, qb[off + BATCH:off + 2 * BATCH],
                                        ql[off + BATCH:off + 2 * BATCH],
-                                       upd_vals)
+                                       upd_vals, engine=engine)
                 outs.append(val)
             return t2.arrays.leaf_val
         t_a = timed(a_fn)
@@ -85,7 +88,8 @@ def run(datasets=DATASETS, n_keys=N_KEYS, n_ops=N_OPS, seed=11) -> List[Dict]:
         n_scan = 1024
         sb, sl = qb[:n_scan], ql[:n_scan]
         def e_fn():
-            kid, val, em, _ = B.range_scan(tree, sb, sl, max_items=50)
+            kid, val, em, _ = B.range_scan(tree, sb, sl, max_items=50,
+                                           engine=engine)
             return val
         t_e = timed(e_fn)
         row["E_Mops"] = round(n_scan * 50 / t_e / 1e6, 3)  # items/s

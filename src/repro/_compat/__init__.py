@@ -1,0 +1,1 @@
+"""Compatibility helpers for optional third-party dependencies."""

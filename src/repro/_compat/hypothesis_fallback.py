@@ -1,0 +1,158 @@
+"""Minimal stand-in for the ``hypothesis`` API surface our tests use.
+
+The test suite property-tests tree ops with hypothesis; some environments
+(hermetic containers) cannot pip-install it. Rather than skipping those
+suites, :func:`install` registers this module as ``hypothesis`` /
+``hypothesis.strategies`` in ``sys.modules`` so the tests run against
+deterministic pseudo-random sampling: each example draws from a
+``random.Random`` seeded by (test name, example index) — reproducible
+across runs, no shrinking, no database.
+
+Only the strategies the repo's tests need are provided: integers, booleans,
+binary, sampled_from, lists, sets, tuples, data. CI installs the real
+package (see requirements-dev.txt); this fallback never shadows it —
+``install`` is a no-op when the genuine library is importable.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import random
+import sys
+import types
+from typing import Any, Callable
+
+DEFAULT_MAX_EXAMPLES = 25
+_MAX_REJECTS = 2000
+
+
+class HealthCheck(enum.Enum):
+    data_too_large = 1
+    filter_too_much = 2
+    too_slow = 3
+    function_scoped_fixture = 4
+    differing_executors = 5
+
+
+class SearchStrategy:
+    def __init__(self, draw_fn: Callable[[random.Random], Any]):
+        self._draw_fn = draw_fn
+
+    def example_from(self, rnd: random.Random) -> Any:
+        return self._draw_fn(rnd)
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    # random.Random.randint is arbitrary precision — safe for ±2**63 bounds
+    return SearchStrategy(lambda rnd: rnd.randint(min_value, max_value))
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rnd: rnd.random() < 0.5)
+
+
+def binary(min_size: int = 0, max_size: int = 16) -> SearchStrategy:
+    def draw(rnd):
+        n = rnd.randint(min_size, max_size)
+        return bytes(rnd.getrandbits(8) for _ in range(n))
+    return SearchStrategy(draw)
+
+
+def sampled_from(seq) -> SearchStrategy:
+    seq = list(seq)
+    return SearchStrategy(lambda rnd: seq[rnd.randrange(len(seq))])
+
+
+def lists(elements: SearchStrategy, min_size: int = 0, max_size: int = 16,
+          unique: bool = False) -> SearchStrategy:
+    def draw(rnd):
+        n = rnd.randint(min_size, max_size)
+        if not unique:
+            return [elements.example_from(rnd) for _ in range(n)]
+        out, seen = [], set()
+        for _ in range(_MAX_REJECTS):
+            if len(out) >= n:
+                break
+            v = elements.example_from(rnd)
+            if v not in seen:
+                seen.add(v)
+                out.append(v)
+        if len(out) < min_size:
+            raise RuntimeError("hypothesis fallback: could not draw "
+                               f"{min_size} unique elements")
+        return out
+    return SearchStrategy(draw)
+
+
+def sets(elements: SearchStrategy, min_size: int = 0,
+         max_size: int = 16) -> SearchStrategy:
+    base = lists(elements, min_size=min_size, max_size=max_size, unique=True)
+    return SearchStrategy(lambda rnd: set(base.example_from(rnd)))
+
+
+def tuples(*strategies: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rnd: tuple(s.example_from(rnd) for s in strategies))
+
+
+class DataObject:
+    def __init__(self, rnd: random.Random):
+        self._rnd = rnd
+
+    def draw(self, strategy: SearchStrategy, label: str = None) -> Any:
+        return strategy.example_from(self._rnd)
+
+
+def data() -> SearchStrategy:
+    return SearchStrategy(lambda rnd: DataObject(rnd))
+
+
+def given(*gargs: SearchStrategy, **gkwargs: SearchStrategy):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        DEFAULT_MAX_EXAMPLES)
+            for i in range(n):
+                rnd = random.Random(f"{fn.__module__}.{fn.__name__}#{i}")
+                drawn = [s.example_from(rnd) for s in gargs]
+                kw = {k: s.example_from(rnd) for k, s in gkwargs.items()}
+                fn(*args, *drawn, **kwargs, **kw)
+        # drop __wrapped__ so pytest sees (*args, **kwargs) and does not
+        # mistake the strategy-filled parameters for fixtures
+        del wrapper.__wrapped__
+        wrapper._fallback_max_examples = DEFAULT_MAX_EXAMPLES
+        return wrapper
+    return decorate
+
+
+def settings(deadline=None, max_examples: int = DEFAULT_MAX_EXAMPLES,
+             suppress_health_check=(), **_ignored):
+    def decorate(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return decorate
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` unless the real one exists."""
+    try:
+        import hypothesis  # noqa: F401
+        return
+    except ImportError:
+        pass
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.HealthCheck = HealthCheck
+    mod.__version__ = "0.0-fallback"
+
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "booleans", "binary", "sampled_from", "lists",
+                 "sets", "tuples", "data"):
+        setattr(st_mod, name, globals()[name])
+    st_mod.SearchStrategy = SearchStrategy
+
+    mod.strategies = st_mod
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st_mod

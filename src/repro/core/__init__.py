@@ -1,15 +1,19 @@
 """FB+-tree core: the paper's data structure + batched latch-free ops in JAX."""
-from .fbtree import FBTree, TreeConfig, bulk_build
+from .fbtree import FBTree, TreeConfig, bulk_build, stack_levels
 from .keys import KeySet, make_keyset, encode_uint64, encode_int64
 from .branch import traverse, branch_level, BranchStats
 from .leaf import probe
+from .traverse import (TraversalEngine, DEFAULT_ENGINE, register_backend,
+                       available_backends)
 from .batch_ops import (lookup_batch, update_batch, insert_batch, remove_batch,
-                        range_scan, OpReport)
+                        range_scan, traverse_probe, OpReport)
 from .baseline import lookup_variant, VARIANTS
 
 __all__ = [
-    "FBTree", "TreeConfig", "bulk_build", "KeySet", "make_keyset",
-    "encode_uint64", "encode_int64", "traverse", "branch_level", "BranchStats",
-    "probe", "lookup_batch", "update_batch", "insert_batch", "remove_batch",
-    "range_scan", "OpReport", "lookup_variant", "VARIANTS",
+    "FBTree", "TreeConfig", "bulk_build", "stack_levels", "KeySet",
+    "make_keyset", "encode_uint64", "encode_int64", "traverse", "branch_level",
+    "BranchStats", "probe", "TraversalEngine", "DEFAULT_ENGINE",
+    "register_backend", "available_backends", "lookup_batch", "update_batch",
+    "insert_batch", "remove_batch", "range_scan", "traverse_probe", "OpReport",
+    "lookup_variant", "VARIANTS",
 ]

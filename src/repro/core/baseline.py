@@ -15,15 +15,16 @@ hardware counters (key compares, 64B lines touched) are directly comparable.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from .branch import BranchStats, branch_level, to_sibling
+from .branch import BranchStats
 from .fbtree import FBTree, Level
 from .keys import compare_padded
 from .leaf import LeafStats, probe
+from .traverse import TraversalEngine, resolve_engine
 
 __all__ = ["branch_level_binary", "probe_leaf_binary", "lookup_variant",
            "VARIANTS"]
@@ -133,24 +134,23 @@ def probe_leaf_binary(tree: FBTree, leaf_ids, qb, ql):
     return found, slot, val, stats
 
 
-@functools.partial(jax.jit, static_argnames=("variant",))
-def lookup_variant(tree: FBTree, qb, ql, variant: str = "feature+hash"):
-    """Point lookup under a factor-analysis variant. Returns (found, val, stats)."""
+@functools.partial(jax.jit, static_argnames=("variant", "engine"))
+def lookup_variant(tree: FBTree, qb, ql, variant: str = "feature+hash",
+                   engine: Optional[TraversalEngine] = None):
+    """Point lookup under a factor-analysis variant. Returns (found, val, stats).
+
+    All variants descend through the traversal engine: the binary-search
+    baselines are the registered ``binary`` / ``binary+prefix`` backends,
+    and the feature variants use ``engine``'s backend (``jnp`` or
+    ``pallas``). ``engine`` also selects the descent layout.
+    """
     assert variant in VARIANTS, variant
-    a = tree.arrays
-    B = qb.shape[0]
-    node_ids = jnp.zeros((B,), jnp.int32)
-    stats = BranchStats.zeros(B)
-    for level in a.levels:
-        if variant in ("base", "prefix"):
-            node_ids, s = branch_level_binary(level, a.key_bytes, a.key_lens,
-                                              node_ids, qb, ql,
-                                              use_prefix=(variant == "prefix"))
-        else:
-            node_ids, s = branch_level(level, a.key_bytes, a.key_lens,
-                                       node_ids, qb, ql)
-        stats = stats + s
-    node_ids, hops = to_sibling(tree, node_ids, qb, ql)
+    eng = resolve_engine(engine)
+    if variant in ("base", "prefix"):
+        eng = TraversalEngine(
+            backend="binary" if variant == "base" else "binary+prefix",
+            layout=eng.layout)
+    node_ids, _, stats = eng.traverse(tree, qb, ql, sibling_check=True)
     if variant == "feature+hash":
         found, slot, val, ls = probe(tree, node_ids, qb, ql)
     else:

@@ -20,19 +20,21 @@ masked scatters dump into; watermarks never allocate it.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from .branch import BranchStats, branch_level, to_sibling
-from .fbtree import EMPTY, FBTree, Level, TreeArrays
+from .branch import BranchStats
+from .fbtree import EMPTY, FBTree, Level, TreeArrays, stack_levels
 from .keys import compare_padded, fnv1a_tags, pack_words_j
 from .leaf import probe
+from .traverse import TraversalEngine, resolve_engine
 
 __all__ = [
     "OpReport", "lookup_batch", "update_batch", "insert_batch",
     "remove_batch", "range_scan", "dedupe_last_wins", "traverse_path",
+    "traverse_probe",
 ]
 
 BIG = jnp.int32(2**30)
@@ -67,21 +69,33 @@ def _report(found, bstats: BranchStats, lstats=None, conflicts=0, splits=0,
     )
 
 
-def traverse_path(tree: FBTree, qb, ql, sibling_check: bool = True):
-    """Root-to-leaf traversal recording the node id at every level."""
-    a = tree.arrays
-    B = qb.shape[0]
-    node_ids = jnp.zeros((B,), jnp.int32)
-    stats = BranchStats.zeros(B)
-    path = []
-    for level in a.levels:
-        path.append(node_ids)
-        node_ids, s = branch_level(level, a.key_bytes, a.key_lens, node_ids, qb, ql)
-        stats = stats + s
-    if sibling_check:
-        node_ids, hops = to_sibling(tree, node_ids, qb, ql)
-        stats = stats._replace(sibling_hops=stats.sibling_hops + hops)
-    return node_ids, path, stats
+def traverse_path(tree: FBTree, qb, ql, sibling_check: bool = True,
+                  engine: Optional[TraversalEngine] = None):
+    """Root-to-leaf traversal recording the node id at every level.
+
+    Delegates to the traversal engine (backend + layout selection); kept as
+    the stable call-site API for ops and benchmarks.
+    """
+    return resolve_engine(engine).traverse(tree, qb, ql,
+                                           sibling_check=sibling_check)
+
+
+def _traverse_probe(tree: FBTree, qb, ql, engine, sibling_check=True):
+    """The shared descend+probe pipeline every point op runs: one engine
+    descent, one hashtag leaf probe. Returns
+    (leaf_ids, path, found, slot, val, branch_stats, leaf_stats)."""
+    leaf_ids, path, bstats = resolve_engine(engine).traverse(
+        tree, qb, ql, sibling_check=sibling_check)
+    found, slot, val, lstats = probe(tree, leaf_ids, qb, ql)
+    return leaf_ids, path, found, slot, val, bstats, lstats
+
+
+@functools.partial(jax.jit, static_argnames=("engine", "sibling_check"))
+def traverse_probe(tree: FBTree, qb, ql,
+                   engine: Optional[TraversalEngine] = None,
+                   sibling_check: bool = True):
+    """Jitted public traverse+probe (see ``_traverse_probe``)."""
+    return _traverse_probe(tree, qb, ql, engine, sibling_check)
 
 
 def dedupe_last_wins(qb, ql, seq) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -179,16 +193,18 @@ def _recompute_inner_meta(kb_store, kl_store, anchors, knum, fs):
 # lookup / update / remove
 # --------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("sibling_check",))
-def lookup_batch(tree: FBTree, qb, ql, sibling_check: bool = True):
+@functools.partial(jax.jit, static_argnames=("sibling_check", "engine"))
+def lookup_batch(tree: FBTree, qb, ql, sibling_check: bool = True,
+                 engine: Optional[TraversalEngine] = None):
     """Batched point lookup. Returns (vals [B], report)."""
-    leaf_ids, _, bstats = traverse_path(tree, qb, ql, sibling_check)
-    found, slot, val, lstats = probe(tree, leaf_ids, qb, ql)
+    _, _, found, slot, val, bstats, lstats = _traverse_probe(
+        tree, qb, ql, engine, sibling_check)
     return val, _report(found, bstats, lstats)
 
 
-@jax.jit
-def update_batch(tree: FBTree, qb, ql, vals):
+@functools.partial(jax.jit, static_argnames=("engine",))
+def update_batch(tree: FBTree, qb, ql, vals,
+                 engine: Optional[TraversalEngine] = None):
     """Blind value update for existing keys (latch-free CAS analogue).
 
     Does NOT bump leaf versions (§4.2 — readers never restart on updates).
@@ -197,8 +213,8 @@ def update_batch(tree: FBTree, qb, ql, vals):
     a = tree.arrays
     dump = a.leaf_occ.shape[0] - 1
     winners, conflicts = dedupe_last_wins(qb, ql, jnp.arange(B, dtype=jnp.int32))
-    leaf_ids, _, bstats = traverse_path(tree, qb, ql)
-    found, slot, _, lstats = probe(tree, leaf_ids, qb, ql)
+    leaf_ids, _, found, slot, _, bstats, lstats = _traverse_probe(
+        tree, qb, ql, engine)
     do = winners & found
     li = jnp.where(do, leaf_ids, dump)
     lv = a.leaf_val.at[li, slot].set(
@@ -207,15 +223,16 @@ def update_batch(tree: FBTree, qb, ql, vals):
                                               conflicts=conflicts)
 
 
-@jax.jit
-def remove_batch(tree: FBTree, qb, ql):
+@functools.partial(jax.jit, static_argnames=("engine",))
+def remove_batch(tree: FBTree, qb, ql,
+                 engine: Optional[TraversalEngine] = None):
     """Tombstone removal (slot cleared, version bumped)."""
     B = qb.shape[0]
     a = tree.arrays
     dump = a.leaf_occ.shape[0] - 1
     winners, conflicts = dedupe_last_wins(qb, ql, jnp.arange(B, dtype=jnp.int32))
-    leaf_ids, _, bstats = traverse_path(tree, qb, ql)
-    found, slot, _, lstats = probe(tree, leaf_ids, qb, ql)
+    leaf_ids, _, found, slot, _, bstats, lstats = _traverse_probe(
+        tree, qb, ql, engine)
     do = winners & found
     li = jnp.where(do, leaf_ids, dump)
     occ = a.leaf_occ.at[li, slot].set(jnp.where(do, False, a.leaf_occ[li, slot]))
@@ -230,16 +247,17 @@ def remove_batch(tree: FBTree, qb, ql):
 # insert (upsert)
 # --------------------------------------------------------------------------
 
-@jax.jit
-def _prepare_insert(tree: FBTree, qb, ql, vals):
+@functools.partial(jax.jit, static_argnames=("engine",))
+def _prepare_insert(tree: FBTree, qb, ql, vals,
+                    engine: Optional[TraversalEngine] = None):
     """Dedupe, update existing keys in place, append new key bytes to pool."""
     B = qb.shape[0]
     a = tree.arrays
     ldump = a.leaf_occ.shape[0] - 1
     kdump = a.key_bytes.shape[0] - 1
     winners, conflicts = dedupe_last_wins(qb, ql, jnp.arange(B, dtype=jnp.int32))
-    leaf_ids, _, bstats = traverse_path(tree, qb, ql)
-    found, slot, _, lstats = probe(tree, leaf_ids, qb, ql)
+    leaf_ids, _, found, slot, _, bstats, lstats = _traverse_probe(
+        tree, qb, ql, engine)
 
     upd = winners & found
     li = jnp.where(upd, leaf_ids, ldump)
@@ -263,7 +281,8 @@ def _prepare_insert(tree: FBTree, qb, ql, vals):
                                           conflicts=conflicts, error=err)
 
 
-def _make_insert_round(cfg, max_ov: int, ins_cap: int):
+def _make_insert_round(cfg, max_ov: int, ins_cap: int,
+                       engine: Optional[TraversalEngine] = None):
     """Build the jitted per-round insert function (static shapes)."""
     ns, fs, L = cfg.ns, cfg.fs, cfg.key_width
     lfill = cfg.leaf_fill
@@ -307,7 +326,8 @@ def _make_insert_round(cfg, max_ov: int, ins_cap: int):
         ldump = LC - 1
         qb = a.key_bytes[jnp.maximum(kid_op, 0)]
         ql = jnp.where(pending, a.key_lens[jnp.maximum(kid_op, 0)], 0)
-        leaf_ids, path, _ = traverse_path(tree, qb, ql, sibling_check=False)
+        leaf_ids, path, _ = resolve_engine(engine).traverse(
+            tree, qb, ql, sibling_check=False)
         leaf_ids = jnp.where(pending, leaf_ids, ldump)
 
         perm = jnp.argsort(jnp.where(pending, leaf_ids, BIG), stable=True)
@@ -443,7 +463,10 @@ def _make_insert_round(cfg, max_ov: int, ins_cap: int):
                 tup_repop, parent_path)
             new_levels[lvl] = lvl2
             err = err | e
-        arrays = arrays._replace(levels=tuple(new_levels))
+        # keep both descent layouts coherent: splits rewrote inner nodes,
+        # so re-derive the stacked copy in-graph (pad + stack, shape-static)
+        arrays = arrays._replace(levels=tuple(new_levels),
+                                 stacked=stack_levels(tuple(new_levels)))
 
         done_orig = jnp.zeros((B,), bool).at[perm].set(done_sorted)
         new_pending = pending & ~done_orig
@@ -568,7 +591,8 @@ _ROUND_CACHE = {}
 
 
 def insert_batch(tree: FBTree, qb, ql, vals, max_ov: int = 128,
-                 ins_cap: int = None, max_rounds: int = 64):
+                 ins_cap: int = None, max_rounds: int = 64,
+                 engine: Optional[TraversalEngine] = None):
     """Batched upsert. Returns (tree', report, rounds).
 
     Orchestrates: dedupe/update/append (one jitted call) + split rounds
@@ -582,12 +606,17 @@ def insert_batch(tree: FBTree, qb, ql, vals, max_ov: int = 128,
     max_ov = min(max_ov, qb.shape[0])   # can't overflow more leaves than ops
     if ins_cap is None:
         ins_cap = 4 * tree.config.ns
-    key = (tree.config, max_ov, ins_cap)
+    # normalize so engine=None and an explicit default engine share one
+    # round cache entry / jit specialization
+    engine = resolve_engine(engine)
+    key = (tree.config, max_ov, ins_cap, engine)
     if key not in _ROUND_CACHE:
-        _ROUND_CACHE[key] = _make_insert_round(tree.config, max_ov, ins_cap)
+        _ROUND_CACHE[key] = _make_insert_round(tree.config, max_ov, ins_cap,
+                                               engine)
     round_fn = _ROUND_CACHE[key]
 
-    tree, kid_op, pending, rep = _prepare_insert(tree, qb, ql, vals)
+    tree, kid_op, pending, rep = _prepare_insert(tree, qb, ql, vals,
+                                                 engine=engine)
     if bool(rep.error):
         raise RuntimeError("insert_batch: key pool capacity exceeded")
     total_splits = jnp.int32(0)
@@ -612,8 +641,9 @@ def insert_batch(tree: FBTree, qb, ql, vals, max_ov: int = 128,
 # range scan
 # --------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("max_items",))
-def range_scan(tree: FBTree, qb, ql, max_items: int = 64):
+@functools.partial(jax.jit, static_argnames=("max_items", "engine"))
+def range_scan(tree: FBTree, qb, ql, max_items: int = 64,
+               engine: Optional[TraversalEngine] = None):
     """Batched range scan: for each start key return up to ``max_items``
     (key_id, value) pairs in ascending key order (lazy rearrangement: unsorted
     leaves are sorted on the fly, modeling §4.5)."""
@@ -621,7 +651,7 @@ def range_scan(tree: FBTree, qb, ql, max_items: int = 64):
     cfg = tree.config
     ns = cfg.ns
     B = qb.shape[0]
-    leaf_ids, _, bstats = traverse_path(tree, qb, ql)
+    leaf_ids, _, bstats = resolve_engine(engine).traverse(tree, qb, ql)
     hops = -(-max_items // max(1, cfg.leaf_fill // 2)) + 1
 
     # one scratch column at index max_items for masked scatter dumps

@@ -103,7 +103,13 @@ def branch_level(level: Level, key_bytes: jnp.ndarray, key_lens: jnp.ndarray,
         eq = jnp.where(resolved[:, None], eq, m)
 
     # ---- suffix binary search fallback over the surviving run ----
+    # a prefix mismatch (pcmp != 0) or a trivial single-child node decides the
+    # branch outright, so those lanes are not billed for the fallback — same
+    # accounting as the Pallas kernel path (its `resolved` already folds both
+    # in), keeping counters backend-independent.
     need_bs = ~resolved
+    trivial = knum <= 1
+    billed_bs = need_bs & (pcmp == 0) & ~trivial
     lo = jnp.argmax(eq, axis=-1).astype(jnp.int32)
     hi = (ns - 1 - jnp.argmax(eq[:, ::-1], axis=-1)).astype(jnp.int32)
     lo_b, hi_b = lo, hi + 1
@@ -121,7 +127,7 @@ def branch_level(level: Level, key_bytes: jnp.ndarray, key_lens: jnp.ndarray,
         go_right = c <= 0
         lo_b = jnp.where(active & go_right, mid + 1, lo_b)
         hi_b = jnp.where(active & ~go_right, mid, hi_b)
-        key_cmp = key_cmp + (active & need_bs).astype(jnp.int32)
+        key_cmp = key_cmp + (active & billed_bs).astype(jnp.int32)
     bs_idx = jnp.clip(lo_b - 1, 0, jnp.maximum(knum - 1, 0))
     idx = jnp.where(need_bs, bs_idx, idx)
 
@@ -132,7 +138,6 @@ def branch_level(level: Level, key_bytes: jnp.ndarray, key_lens: jnp.ndarray,
     # single-child chain nodes (fixed-height artifact) are free pass-throughs:
     # a real variable-height FB+-tree has no such nodes, so they must not
     # contribute to the paper-comparable counters.
-    trivial = knum <= 1
     idx = jnp.where(trivial, 0, idx)
 
     child = jnp.take_along_axis(level.children[node_ids], idx[:, None], axis=-1)[:, 0]
@@ -141,7 +146,7 @@ def branch_level(level: Level, key_bytes: jnp.ndarray, key_lens: jnp.ndarray,
     kw_lines = (ql + 63) // 64  # modeled lines per full key compare
     stats = BranchStats(
         feat_rounds=nz(feat_rounds),
-        suffix_bs=nz(need_bs.astype(jnp.int32) & ~trivial),
+        suffix_bs=billed_bs.astype(jnp.int32),
         key_compares=nz(key_cmp),
         lines_touched=nz(1 + feat_rounds * lines_per_row
                          + key_cmp * (1 + kw_lines) + 1),
@@ -168,15 +173,13 @@ def to_sibling(tree: FBTree, leaf_ids: jnp.ndarray, qb: jnp.ndarray,
 
 def traverse(tree: FBTree, qb: jnp.ndarray, ql: jnp.ndarray,
              with_sibling_check: bool = True) -> Tuple[jnp.ndarray, BranchStats]:
-    """Root-to-leaf traversal. Returns (leaf_ids, stats)."""
-    B = qb.shape[0]
-    a = tree.arrays
-    node_ids = jnp.zeros((B,), jnp.int32)  # root = node 0 of level 0
-    stats = BranchStats.zeros(B)
-    for level in a.levels:
-        node_ids, s = branch_level(level, a.key_bytes, a.key_lens, node_ids, qb, ql)
-        stats = stats + s
-    if with_sibling_check:
-        node_ids, hops = to_sibling(tree, node_ids, qb, ql)
-        stats = stats._replace(sibling_hops=stats.sibling_hops + hops)
-    return node_ids, stats
+    """Root-to-leaf traversal. Returns (leaf_ids, stats).
+
+    Thin compatibility wrapper: the actual descent lives in
+    ``core.traverse.TraversalEngine`` (imported lazily — traverse.py imports
+    this module for the default backend).
+    """
+    from .traverse import DEFAULT_ENGINE
+    leaf_ids, _, stats = DEFAULT_ENGINE.traverse(
+        tree, qb, ql, sibling_check=with_sibling_check)
+    return leaf_ids, stats

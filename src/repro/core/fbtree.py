@@ -31,7 +31,8 @@ import numpy as np
 
 from . import keys as K
 
-__all__ = ["TreeConfig", "Level", "FBTree", "bulk_build", "tree_to_device"]
+__all__ = ["TreeConfig", "Level", "FBTree", "bulk_build", "tree_to_device",
+           "stack_levels"]
 
 EMPTY = np.int32(-1)
 
@@ -48,11 +49,15 @@ class TreeConfig:
     level_caps: Tuple[int, ...] = (1, 16, 256)
     key_cap: int = 65536
     val_dtype: Any = jnp.int32
+    # default descent layout for the traversal engine: False = per-level
+    # tuple (Python loop), True = stacked [n_levels, C_max, ...] arrays
+    # driven by one lax.scan. Both layouts are always materialized.
+    stacked: bool = False
 
     @staticmethod
     def plan(max_keys: int, key_width: int, ns: int = 64, fs: int = 4,
              leaf_fill: int = 48, inner_fill: int = 48,
-             val_dtype: Any = jnp.int32) -> "TreeConfig":
+             val_dtype: Any = jnp.int32, stacked: bool = False) -> "TreeConfig":
         """Capacity planning: fixed height with min-fanout-16 safety margin."""
         leaf_cap = max(2, -(-max_keys // max(8, leaf_fill // 3)))
         caps: List[int] = []
@@ -67,7 +72,7 @@ class TreeConfig:
                           leaf_fill=min(leaf_fill, ns), inner_fill=min(inner_fill, ns),
                           n_levels=len(caps), leaf_cap=leaf_cap,
                           level_caps=tuple(caps), key_cap=int(max_keys),
-                          val_dtype=val_dtype)
+                          val_dtype=val_dtype, stacked=stacked)
 
 
 class Level(NamedTuple):
@@ -86,6 +91,7 @@ class TreeArrays(NamedTuple):
     key_tags: jnp.ndarray    # uint8 [KC] hash fingerprints (computed at append)
     key_count: jnp.ndarray   # int32 scalar
     levels: Tuple[Level, ...]
+    stacked: Level           # same levels, stacked+padded to [n_levels, C_max, ...]
     leaf_tags: jnp.ndarray   # uint8 [LC, ns]
     leaf_keyid: jnp.ndarray  # int32 [LC, ns] (-1 empty)
     leaf_val: jnp.ndarray    # val_dtype [LC, ns]
@@ -124,6 +130,34 @@ class FBTree:
     @property
     def n_keys_live(self) -> int:
         return int(jnp.sum(self.arrays.leaf_occ))
+
+
+def stack_levels(levels: Tuple[Level, ...]) -> Level:
+    """Stack per-level arrays into one padded [n_levels, C_max, ...] Level.
+
+    Rows past a level's own cap are knum=0 / children=anchors=EMPTY, so a
+    backend treats them as trivial nodes (well-formed descents never land on
+    them). ``count`` becomes an int32 [n_levels] vector. Pure jnp: callable
+    under jit, so mutating ops can refresh the stacked copy in-graph.
+    """
+    C_max = max(l.knum.shape[0] for l in levels)
+
+    def pad(a, fillv):
+        short = C_max - a.shape[0]
+        if short == 0:
+            return a
+        return jnp.concatenate(
+            [a, jnp.full((short,) + a.shape[1:], fillv, a.dtype)], axis=0)
+
+    return Level(
+        knum=jnp.stack([pad(l.knum, 0) for l in levels]),
+        plen=jnp.stack([pad(l.plen, 0) for l in levels]),
+        prefix=jnp.stack([pad(l.prefix, 0) for l in levels]),
+        features=jnp.stack([pad(l.features, 0) for l in levels]),
+        children=jnp.stack([pad(l.children, EMPTY) for l in levels]),
+        anchors=jnp.stack([pad(l.anchors, EMPTY) for l in levels]),
+        count=jnp.stack([l.count for l in levels]),
+    )
 
 
 def _common_prefix_len(kb: np.ndarray, kl: np.ndarray) -> Tuple[int, np.ndarray]:
@@ -283,6 +317,7 @@ def bulk_build(cfg: TreeConfig, ks: K.KeySet, vals: np.ndarray) -> FBTree:
         key_tags=jnp.asarray(ktags),
         key_count=jnp.asarray(np.int32(n)),
         levels=tuple(levels),
+        stacked=stack_levels(tuple(levels)),
         leaf_tags=jnp.asarray(leaf_tags), leaf_keyid=jnp.asarray(leaf_keyid),
         leaf_val=jnp.asarray(leaf_val).astype(cfg.val_dtype),
         leaf_occ=jnp.asarray(leaf_occ),

@@ -1,0 +1,160 @@
+"""Unified scan-based traversal engine with pluggable branch backends.
+
+Branch resolution — prefix compare + feature comparison + suffix binary
+search (paper §3.2–3.4) — is one reusable primitive applied identically at
+every inner level. This module is the single entry point for all
+root-to-leaf descent:
+
+* **Backend registry** maps a name to a ``branch_level``-shaped function
+  ``fn(level, key_bytes, key_lens, node_ids, qb, ql) -> (child_ids, stats)``.
+  Built-ins:
+    - ``"jnp"``            pure-XLA oracle (``core.branch.branch_level``)
+    - ``"pallas"``         Pallas feature-comparison kernel
+                           (``kernels.feature_branch``; interpret mode
+                           off-TPU, hardware kernel on TPU)
+    - ``"binary"``         classic full-key binary search baseline
+    - ``"binary+prefix"``  baseline with prefix skip
+  New kernels land here via :func:`register_backend` without touching op
+  code.
+
+* **Layouts**: ``"tuple"`` descends the per-level tuple with an unrolled
+  Python loop (one XLA op chain per level — levels may have different node
+  counts). ``"stacked"`` runs one ``lax.scan`` over the padded
+  ``[n_levels, C_max, ...]`` Level pytree (level-synchronous batched
+  traversal over homogeneous node arrays, BS-tree style): the compiled
+  module carries a single level-step body regardless of tree height, and
+  ``BranchStats`` accumulate inside the scan carry.
+
+``TraversalEngine`` is a frozen (hashable) dataclass so it can ride along
+as a static jit argument; one engine value == one compiled specialization.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .branch import BranchStats, branch_level, to_sibling
+from .fbtree import FBTree, Level
+
+__all__ = [
+    "TraversalEngine", "DEFAULT_ENGINE", "register_backend", "get_backend",
+    "available_backends", "resolve_engine",
+]
+
+# fn(level, key_bytes, key_lens, node_ids, qb, ql) -> (child_ids, stats)
+BackendFn = Callable[..., Tuple[jnp.ndarray, BranchStats]]
+
+_BACKENDS: Dict[str, BackendFn] = {}
+_LAZY_BACKENDS: Dict[str, Callable[[], BackendFn]] = {}
+
+
+def register_backend(name: str, fn: BackendFn = None, *,
+                     loader: Callable[[], BackendFn] = None) -> None:
+    """Register a branch backend (eagerly, or via a deferred ``loader`` for
+    backends whose import is heavy or optional)."""
+    assert (fn is None) != (loader is None), "pass exactly one of fn/loader"
+    if fn is not None:
+        _BACKENDS[name] = fn
+        _LAZY_BACKENDS.pop(name, None)
+    else:
+        _LAZY_BACKENDS[name] = loader
+
+
+def get_backend(name: str) -> BackendFn:
+    if name not in _BACKENDS:
+        if name not in _LAZY_BACKENDS:
+            raise KeyError(
+                f"unknown traversal backend {name!r}; "
+                f"available: {sorted(set(_BACKENDS) | set(_LAZY_BACKENDS))}")
+        _BACKENDS[name] = _LAZY_BACKENDS.pop(name)()
+    return _BACKENDS[name]
+
+
+def available_backends() -> List[str]:
+    return sorted(set(_BACKENDS) | set(_LAZY_BACKENDS))
+
+
+def _load_pallas_backend() -> BackendFn:
+    from repro.kernels.feature_branch.ops import branch_level_pallas
+    return branch_level_pallas
+
+
+def _load_binary_backend(use_prefix: bool) -> BackendFn:
+    from .baseline import branch_level_binary
+    return functools.partial(branch_level_binary, use_prefix=use_prefix)
+
+
+register_backend("jnp", branch_level)
+register_backend("pallas", loader=_load_pallas_backend)
+register_backend("binary", loader=functools.partial(_load_binary_backend, False))
+register_backend("binary+prefix",
+                 loader=functools.partial(_load_binary_backend, True))
+
+LAYOUTS = ("tuple", "stacked")
+
+
+@dataclasses.dataclass(frozen=True)
+class TraversalEngine:
+    """Root-to-leaf descent strategy: (backend, layout).
+
+    ``layout=None`` defers to ``tree.config.stacked`` at trace time, so one
+    engine value serves trees of either default layout.
+    """
+    backend: str = "jnp"
+    layout: Optional[str] = None
+
+    def __post_init__(self):
+        # fail at construction, not deep inside the first jit trace
+        if self.backend not in available_backends():
+            raise ValueError(f"unknown traversal backend {self.backend!r}; "
+                             f"available: {available_backends()}")
+        if self.layout not in (None,) + LAYOUTS:
+            raise ValueError(f"unknown layout {self.layout!r}; "
+                             f"expected one of {LAYOUTS} or None")
+
+    def resolve_layout(self, tree: FBTree) -> str:
+        return self.layout or ("stacked" if tree.config.stacked else "tuple")
+
+    def traverse(self, tree: FBTree, qb: jnp.ndarray, ql: jnp.ndarray,
+                 sibling_check: bool = True,
+                 ) -> Tuple[jnp.ndarray, List[jnp.ndarray], BranchStats]:
+        """Descend all inner levels. Returns (leaf_ids, path, stats) where
+        ``path[l]`` is each query's node id AT level ``l`` (root first) —
+        the parent chain the split path propagates anchors through."""
+        a = tree.arrays
+        fn = get_backend(self.backend)
+        B = qb.shape[0]
+        node_ids = jnp.zeros((B,), jnp.int32)   # root = node 0 of level 0
+        stats = BranchStats.zeros(B)
+
+        if self.resolve_layout(tree) == "tuple":
+            path = []
+            for level in a.levels:
+                path.append(node_ids)
+                node_ids, s = fn(level, a.key_bytes, a.key_lens, node_ids,
+                                 qb, ql)
+                stats = stats + s
+        else:
+            def step(carry, level: Level):
+                ids, st = carry
+                child, s = fn(level, a.key_bytes, a.key_lens, ids, qb, ql)
+                return (child, st + s), ids
+            (node_ids, stats), path_arr = jax.lax.scan(
+                step, (node_ids, stats), a.stacked)
+            path = [path_arr[l] for l in range(len(a.levels))]
+
+        if sibling_check:
+            node_ids, hops = to_sibling(tree, node_ids, qb, ql)
+            stats = stats._replace(sibling_hops=stats.sibling_hops + hops)
+        return node_ids, path, stats
+
+
+DEFAULT_ENGINE = TraversalEngine(backend="jnp", layout=None)
+
+
+def resolve_engine(engine: Optional[TraversalEngine]) -> TraversalEngine:
+    return DEFAULT_ENGINE if engine is None else engine

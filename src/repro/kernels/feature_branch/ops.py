@@ -1,8 +1,10 @@
 """Jitted wrapper: full branch_level built on the feature_branch kernel.
 
-Swappable with core.branch.branch_level — the gather / prefix-compare /
-suffix-binary-search stages run in XLA, the feature-comparison hot loop in
-Pallas (interpret mode off-TPU).
+Registered as the ``"pallas"`` backend in the traversal-engine registry
+(``core.traverse``) — drop-in for core.branch.branch_level with identical
+BranchStats accounting. The gather / prefix-compare / suffix-binary-search
+stages run in XLA, the feature-comparison hot loop in Pallas (interpret
+mode off-TPU).
 """
 from __future__ import annotations
 

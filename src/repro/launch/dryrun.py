@@ -181,6 +181,8 @@ def run_cell(arch: str, shape: str, mesh_kind: str, fsdp: bool = False,
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):   # older jax: one dict per program
+            ca = ca[0] if ca else {}
         try:
             ma = compiled.memory_analysis()
             mem = {k: int(getattr(ma, k)) for k in (

@@ -16,6 +16,15 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+# jax >= 0.6 promotes shard_map to jax.shard_map (replication check renamed
+# check_vma); on the 0.4/0.5 line it lives in jax.experimental as check_rep
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
 
 def pipeline_apply(mesh: Mesh, stage_fn: Callable, params_stacked, x,
                    n_micro: int):
@@ -61,9 +70,9 @@ def pipeline_apply(mesh: Mesh, stage_fn: Callable, params_stacked, x,
                                    jnp.arange(n_ticks, dtype=jnp.int32))
         return out
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         per_stage, mesh=mesh,
         in_specs=(P("stage"), P()),       # params split by stage; x replicated
         out_specs=P(),
-        check_vma=False)
+        **{_CHECK_KW: False})
     return fn(params_stacked, x)

@@ -21,6 +21,8 @@ import numpy as np
 from repro.models import lm
 from repro.models.config import ModelConfig
 
+from repro.core.traverse import TraversalEngine
+
 from .prefix_cache import PrefixCache
 
 
@@ -31,6 +33,9 @@ class ServeConfig:
     block_tokens: int = 32
     n_pages: int = 1024
     max_new_tokens: int = 32
+    # traversal engine for the prefix-cache tree (None -> core default)
+    tree_backend: Optional[str] = None
+    tree_layout: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -50,7 +55,11 @@ class Engine:
         self.cache = lm.init_cache(cfg, scfg.max_batch, scfg.s_max)
         self.pos = np.zeros(scfg.max_batch, np.int32)
         self.live: List[Optional[Request]] = [None] * scfg.max_batch
-        self.prefix = PrefixCache(scfg.n_pages, scfg.block_tokens)
+        tree_engine = (TraversalEngine(scfg.tree_backend or "jnp",
+                                       scfg.tree_layout)
+                       if (scfg.tree_backend or scfg.tree_layout) else None)
+        self.prefix = PrefixCache(scfg.n_pages, scfg.block_tokens,
+                                  engine=tree_engine)
         # host page store: [n_pages, L, 2, block, kv, hd]
         L = cfg.n_layers
         self.page_kv = np.zeros(

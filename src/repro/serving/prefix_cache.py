@@ -25,6 +25,7 @@ import numpy as np
 from repro.core import batch_ops as B
 from repro.core import keys as K
 from repro.core.fbtree import TreeConfig, bulk_build
+from repro.core.traverse import TraversalEngine
 
 from .pages import PagePool
 
@@ -50,10 +51,14 @@ def chain_keys(tokens: np.ndarray, block_tokens: int) -> List[bytes]:
 
 class PrefixCache:
     def __init__(self, n_pages: int = 4096, block_tokens: int = 32,
-                 max_keys: int = 1 << 16):
+                 max_keys: int = 1 << 16,
+                 engine: Optional[TraversalEngine] = None):
         self.block_tokens = block_tokens
+        self.engine = engine      # None -> core DEFAULT_ENGINE
         self.pool = PagePool(n_pages)
-        cfg = TreeConfig.plan(max_keys=max_keys, key_width=KEY_W)
+        cfg = TreeConfig.plan(
+            max_keys=max_keys, key_width=KEY_W,
+            stacked=(engine is not None and engine.layout == "stacked"))
         seed = K.make_keyset([b"\x00" * KEY_W], KEY_W)   # sentinel root key
         self.tree = bulk_build(cfg, seed, np.array([-1], np.int32))
         self.stats = {"lookups": 0, "hits": 0, "inserts": 0, "evicts": 0}
@@ -75,7 +80,8 @@ class PrefixCache:
         if not all_keys:
             return [0] * len(requests), [[] for _ in requests]
         ks = K.make_keyset(all_keys, KEY_W)
-        vals, rep = B.lookup_batch(self.tree, ks.bytes, ks.lens)
+        vals, rep = B.lookup_batch(self.tree, ks.bytes, ks.lens,
+                                   engine=self.engine)
         vals = np.asarray(vals)
         found = np.asarray(rep.found)
         self.stats["lookups"] += len(all_keys)
@@ -116,7 +122,8 @@ class PrefixCache:
                 return None
         ks = K.make_keyset(new, KEY_W)
         self.tree, rep, _ = B.insert_batch(self.tree, ks.bytes, ks.lens,
-                                           ids.astype(np.int32))
+                                           ids.astype(np.int32),
+                                           engine=self.engine)
         self.pool.release(ids)       # cache-owned: evictable until pinned
         self.stats["inserts"] += len(new)
         return ids
@@ -131,7 +138,8 @@ class PrefixCache:
         start = K.make_keyset([b"\x00" * KEY_W], KEY_W)
         kid, val, emitted, _ = B.range_scan(
             self.tree, start.bytes, start.lens,
-            max_items=min(4096, self.tree.config.key_cap))
+            max_items=min(4096, self.tree.config.key_cap),
+            engine=self.engine)
         kid, val = np.asarray(kid[0]), np.asarray(val[0])
         vict = set(victims.tolist())
         sel = [i for i in range(int(emitted[0]))
@@ -140,7 +148,7 @@ class PrefixCache:
             return
         kb = np.asarray(self.tree.arrays.key_bytes)[kid[sel]]
         kl = np.asarray(self.tree.arrays.key_lens)[kid[sel]]
-        self.tree, _ = B.remove_batch(self.tree, kb, kl)
+        self.tree, _ = B.remove_batch(self.tree, kb, kl, engine=self.engine)
         self.pool.evict(victims)
         self.stats["evicts"] += len(sel)
 

@@ -10,8 +10,19 @@ from repro.models import lm
 from repro.parallel import sharding as SH
 from repro.train import optim as O
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+def _abstract_mesh(sizes, names):
+    """AbstractMesh across JAX versions: older releases take
+    (axis_sizes, axis_names), the installed one takes a shape tuple of
+    (name, size) pairs."""
+    try:
+        return AbstractMesh(tuple(zip(names, sizes)))
+    except TypeError:
+        return AbstractMesh(tuple(sizes), tuple(names))
+
+
+MESH = _abstract_mesh((16, 16), ("data", "model"))
+MESH3 = _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def spec(path, shape, mesh=MESH):

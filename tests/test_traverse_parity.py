@@ -1,0 +1,114 @@
+"""Engine contract: every (backend, layout) combination is observationally
+identical — same children at every level, same leaf ids, same
+machine-independent BranchStats — on randomized trees drawn from the
+benchmark dataset distributions."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import batch_ops as B
+from repro.core import keys as K
+from repro.core.fbtree import TreeConfig, bulk_build, stack_levels
+from repro.core.traverse import (DEFAULT_ENGINE, TraversalEngine,
+                                 available_backends, get_backend)
+
+from benchmarks.common import make_dataset
+
+COMBOS = [(b, l) for b in ("jnp", "pallas") for l in ("tuple", "stacked")]
+
+STAT_FIELDS = ("feat_rounds", "suffix_bs", "key_compares", "sibling_hops")
+
+
+def _build(ds_name, n_keys, seed, fs=4):
+    keys, width = make_dataset(ds_name, n_keys, seed=seed)
+    ks = K.make_keyset(keys, width)
+    cfg = TreeConfig.plan(max_keys=2 * n_keys, key_width=width, fs=fs)
+    tree = bulk_build(cfg, ks, np.arange(len(keys), dtype=np.int32))
+    return tree, ks
+
+
+@settings(deadline=None, max_examples=8,
+          suppress_health_check=list(HealthCheck))
+@given(st.sampled_from(("rand-int", "3-gram", "ycsb", "twitter", "url")),
+       st.sampled_from((2, 4)), st.integers(0, 2**31 - 1))
+def test_backend_layout_parity(ds_name, fs, seed):
+    tree, ks = _build(ds_name, 600, seed % 1000, fs=fs)
+    rng = np.random.default_rng(seed)
+    # mix of present keys and perturbed (mostly-missing) keys
+    idx = rng.integers(0, ks.n, size=192)
+    qb = ks.bytes[idx].copy()
+    ql = ks.lens[idx].copy()
+    flip = rng.random(192) < 0.3
+    qb[flip, -1] ^= 0xA5
+    qb, ql = jnp.asarray(qb), jnp.asarray(ql)
+
+    results = {}
+    for backend, layout in COMBOS:
+        eng = TraversalEngine(backend=backend, layout=layout)
+        leaf, path, stats = eng.traverse(tree, qb, ql)
+        results[(backend, layout)] = (np.asarray(leaf),
+                                      [np.asarray(p) for p in path], stats)
+    ref_leaf, ref_path, ref_stats = results[("jnp", "tuple")]
+    for combo, (leaf, path, stats) in results.items():
+        assert (leaf == ref_leaf).all(), (combo, "leaf ids")
+        for lvl, (p, rp) in enumerate(zip(path, ref_path)):
+            assert (p == rp).all(), (combo, "children at level", lvl)
+        for f in STAT_FIELDS:
+            a = np.asarray(getattr(stats, f))
+            b = np.asarray(getattr(ref_stats, f))
+            assert (a == b).all(), (combo, f)
+
+
+@settings(deadline=None, max_examples=6,
+          suppress_health_check=list(HealthCheck))
+@given(st.sampled_from(("ycsb", "url")), st.integers(0, 2**31 - 1))
+def test_lookup_reports_identical_across_engines(ds_name, seed):
+    tree, ks = _build(ds_name, 400, seed % 1000)
+    qb = jnp.asarray(ks.bytes[:128])
+    ql = jnp.asarray(ks.lens[:128])
+    ref = None
+    for backend, layout in COMBOS:
+        vals, rep = B.lookup_batch(tree, qb, ql,
+                                   engine=TraversalEngine(backend, layout))
+        sig = (np.asarray(vals), np.asarray(rep.found),
+               np.asarray(rep.key_compares), np.asarray(rep.suffix_bs),
+               np.asarray(rep.feat_rounds))
+        if ref is None:
+            ref = sig
+            assert sig[1].all()   # all present keys found
+        for a, b in zip(ref, sig):
+            assert (a == b).all(), (backend, layout)
+
+
+def test_stacked_matches_tuple_after_inserts():
+    """The stacked copy must track the tuple levels through split rounds."""
+    KW = 12
+    keys = [int(x) for x in range(0, 3000, 3)]
+    ks0 = K.make_keyset(keys[:100], KW)
+    cfg = TreeConfig.plan(max_keys=8192, key_width=KW, stacked=True)
+    t = bulk_build(cfg, ks0, np.arange(100, dtype=np.int32))
+    ks = K.make_keyset(keys[100:], KW)
+    t, rep, _ = B.insert_batch(t, ks.bytes, ks.lens,
+                               np.arange(100, 1000, dtype=np.int32),
+                               engine=TraversalEngine("jnp", "stacked"))
+    assert int(rep.splits) > 0
+    restacked = stack_levels(t.arrays.levels)
+    for got, want in zip(t.arrays.stacked, restacked):
+        assert (np.asarray(got) == np.asarray(want)).all()
+    allk = K.make_keyset(keys, KW)
+    v_t, r_t = B.lookup_batch(t, allk.bytes, allk.lens,
+                              engine=TraversalEngine("jnp", "tuple"))
+    v_s, r_s = B.lookup_batch(t, allk.bytes, allk.lens,
+                              engine=TraversalEngine("pallas", "stacked"))
+    assert np.asarray(r_t.found).all() and np.asarray(r_s.found).all()
+    assert (np.asarray(v_t) == np.asarray(v_s)).all()
+
+
+def test_backend_registry():
+    for name in ("jnp", "pallas", "binary", "binary+prefix"):
+        assert name in available_backends()
+        assert callable(get_backend(name))
+    with pytest.raises(KeyError):
+        get_backend("no-such-backend")
+    assert DEFAULT_ENGINE.backend == "jnp"
