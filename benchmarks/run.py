@@ -6,7 +6,9 @@
 ``--backend``/``--layout`` select the traversal engine for the suites that
 descend the tree (ycsb, factor, traverse). The ``traverse`` suite A/Bs all
 backend×layout combinations regardless and writes ``BENCH_traverse.json``
-at the repo root. Writes CSVs under out/bench/ and prints each table.
+at the repo root; the ``build`` suite benchmarks host vs device
+``bulk_build`` (+ ``rebuild``) and merges its rows into the same file.
+Writes CSVs under out/bench/ and prints each table.
 """
 from __future__ import annotations
 
@@ -37,6 +39,10 @@ SUITES = {
                      n_keys=8_000 if fast else 20_000,
                      n_ops=8_192 if fast else 16_384),
                  traverse_bench.COLUMNS),
+    "build": ("DESIGN.md §5 — host vs device bulk build + rebuild",
+              lambda fast: traverse_bench.run_build(
+                  sizes=(2_000, 8_000) if fast else (5_000, 20_000)),
+              traverse_bench.BUILD_COLUMNS),
     "memory": ("Fig.12b — index memory consumption",
                lambda fast: memory.run(n_keys=8_000 if fast else 20_000),
                memory.COLUMNS),
@@ -107,6 +113,9 @@ def main(argv=None):
             w.writerows(rows)
         if name == "traverse":
             print("engine A/B written to", traverse_bench.write_json(rows))
+        elif name == "build":
+            print("build rows written to",
+                  traverse_bench.write_json(build_rows=rows))
     print("\nCSV written to", args.out)
 
 

@@ -1,11 +1,15 @@
 """Traversal engine A/B: backends (jnp vs pallas-interpret) × layouts
-(tuple vs stacked) on identical trees and query streams.
+(tuple vs stacked) on identical trees and query streams — plus the build
+benchmark (:func:`run_build`): host-numpy vs device-jnp ``bulk_build``
+across datasets and tree sizes, with a bit-exact parity cross-check
+(DESIGN.md §5).
 
 Cross-checks that every combination returns identical leaf ids and
 machine-independent counters (``key_compares``, ``suffix_bs``,
 ``feat_rounds``) — the engine contract — then reports relative lookup
 throughput. Results also land in ``BENCH_traverse.json`` at the repo root
-so the perf trajectory of future kernel PRs starts here.
+(``rows`` = traversal A/B, ``build_rows`` = host-vs-device build) so the
+perf trajectory of future kernel PRs starts here.
 """
 from __future__ import annotations
 
@@ -13,10 +17,13 @@ import json
 import os
 from typing import Dict, List
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import batch_ops as B
+from repro.core import keys as K
+from repro.core.fbtree import TreeConfig, bulk_build
 from repro.core.traverse import TraversalEngine
 
 from .common import build_tree, make_dataset, timed, zipf_indices
@@ -56,7 +63,8 @@ def run(datasets=("ycsb", "url"), n_keys=20_000, n_ops=16_384,
                     assert (a == b).all(), \
                         f"{ds}: {backend}/{layout} diverges on {nm}"
             rows.append({
-                "dataset": ds, "backend": backend, "layout": layout,
+                "dataset": ds, "n_keys": len(keys), "n_ops": n_ops,
+                "backend": backend, "layout": layout,
                 "Mops": round(n_ops / t / 1e6, 3),
                 "key_cmp/op": round(float(rep.key_compares.mean()), 2),
                 "suffix_bs/op": round(float(rep.suffix_bs.mean()), 3),
@@ -66,15 +74,85 @@ def run(datasets=("ycsb", "url"), n_keys=20_000, n_ops=16_384,
     return rows
 
 
-COLUMNS = ["dataset", "backend", "layout", "Mops", "key_cmp/op",
-           "suffix_bs/op", "feat_rounds/op", "parity"]
+# n_keys/n_ops ride along so the trajectory anchor stays comparable across
+# PRs — counters like key_cmp/op shift with tree size, not just with code
+COLUMNS = ["dataset", "n_keys", "n_ops", "backend", "layout", "Mops",
+           "key_cmp/op", "suffix_bs/op", "feat_rounds/op", "parity"]
 
 
-def write_json(rows: List[Dict], path: str = None) -> str:
+def run_build(datasets=("ycsb", "url"), sizes=(5_000, 20_000),
+              rebuild_frac=0.3, seed=23) -> List[Dict]:
+    """Host vs device ``bulk_build`` (+ ``rebuild``) across datasets/sizes.
+
+    For each (dataset, n_keys): time the numpy host build, the jit device
+    build, and a device ``rebuild`` after tombstoning ``rebuild_frac`` of the
+    keys; verify host and device builds are bit-identical (the DESIGN.md §5
+    parity contract) before reporting. On the CPU backend the device rows are
+    relative anchors only (XLA-CPU gathers lose to numpy at these sizes); the
+    win the rows track is device residency — no host round-trip, and
+    ``rebuild`` composing under jit with the serving loop.
+    """
+    rows = []
+    for ds in datasets:
+        for n_keys in sizes:
+            keys, width = make_dataset(ds, n_keys, seed=seed)
+            ks = K.make_keyset(keys, width)
+            cfg = TreeConfig.plan(max_keys=int(len(keys) * 2.5),
+                                  key_width=width)
+            vals = np.arange(len(keys), dtype=np.int32)
+            def _equal(ta, tb):
+                return all(
+                    (np.asarray(x) == np.asarray(y)).all()
+                    for x, y in zip(jax.tree_util.tree_leaves(ta.arrays),
+                                    jax.tree_util.tree_leaves(tb.arrays)))
+
+            th = bulk_build(cfg, ks, vals)
+            td = bulk_build(cfg, ks, vals, device=True)
+            parity = _equal(th, td)
+            t_host = timed(lambda: bulk_build(cfg, ks, vals))
+            t_dev = timed(lambda: bulk_build(cfg, ks, vals, device=True))
+            n_rm = int(len(keys) * rebuild_frac)
+            rm = K.make_keyset(keys[:n_rm], width)
+            tfrag, _ = B.remove_batch(td, jnp.asarray(rm.bytes),
+                                      jnp.asarray(rm.lens))
+            t_reb = timed(lambda: B.rebuild(tfrag))
+            # rebuild's own §5 contract: equals a fresh build of the live set
+            trebuilt, _ = B.rebuild(tfrag)
+            tref = bulk_build(cfg, K.make_keyset(keys[n_rm:], width),
+                              vals[n_rm:], device=True)
+            reb_parity = _equal(trebuilt, tref)
+            for mode, t, ok in (("host", t_host, parity),
+                                ("device", t_dev, parity),
+                                ("rebuild", t_reb, reb_parity)):
+                rows.append({
+                    "dataset": ds, "n_keys": len(keys), "mode": mode,
+                    "build_ms": round(t * 1e3, 2),
+                    "Mkeys/s": round(len(keys) / t / 1e6, 3),
+                    "parity": "ok" if ok else "MISMATCH",
+                })
+    return rows
+
+
+BUILD_COLUMNS = ["dataset", "n_keys", "mode", "build_ms", "Mkeys/s",
+                 "parity"]
+
+
+def write_json(rows: List[Dict] = None, build_rows: List[Dict] = None,
+               path: str = None) -> str:
+    """Merge the given section(s) into ``BENCH_traverse.json`` — the perf
+    trajectory anchor accumulates; suites never clobber each other."""
     if path is None:
         path = os.path.join(os.path.dirname(os.path.dirname(__file__)),
                             "BENCH_traverse.json")
+    data = {"suite": "traverse"}
+    if os.path.exists(path):
+        with open(path) as f:
+            data = json.load(f)
+    if rows is not None:
+        data["rows"] = rows
+    if build_rows is not None:
+        data["build_rows"] = build_rows
     with open(path, "w") as f:
-        json.dump({"suite": "traverse", "rows": rows}, f, indent=2)
+        json.dump(data, f, indent=2)
         f.write("\n")
     return path

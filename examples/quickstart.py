@@ -38,6 +38,15 @@ tree, repi, rounds = B.insert_batch(tree, new.bytes, new.lens,
 print(f"inserted {new.n} keys in {rounds} bulk-split rounds "
       f"({int(repi.splits)} leaf splits)")
 
+# ---- device build + online rebuild (DESIGN.md §5) -------------------------
+tree_dev = bulk_build(cfg, ks, np.arange(len(keys), dtype=np.int32),
+                      device=True)     # jit pipeline, bit-identical arrays
+rm = K.make_keyset([f"user:{i:06d}".encode() for i in range(0, 20_000, 8)], 16)
+tree_dev, _ = B.remove_batch(tree_dev, rm.bytes, rm.lens)
+tree_dev, rep = B.rebuild(tree_dev)    # compact tombstones device-side
+print(f"rebuild: {int(rep.n_live)} live keys in {int(rep.n_leaves)} leaves "
+      f"({int(rep.reclaimed)} pool rows reclaimed)")
+
 # ---- ordered range scan ---------------------------------------------------
 start = K.make_keyset([b"user:000399"], 16)
 kid, vals, emitted, _ = B.range_scan(tree, start.bytes, start.lens,

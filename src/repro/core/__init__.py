@@ -6,7 +6,8 @@ from .leaf import probe
 from .traverse import (TraversalEngine, DEFAULT_ENGINE, register_backend,
                        available_backends)
 from .batch_ops import (lookup_batch, update_batch, insert_batch, remove_batch,
-                        range_scan, traverse_probe, OpReport)
+                        range_scan, rebuild, traverse_probe, OpReport,
+                        BuildReport)
 from .baseline import lookup_variant, VARIANTS
 
 __all__ = [
@@ -14,6 +15,6 @@ __all__ = [
     "make_keyset", "encode_uint64", "encode_int64", "traverse", "branch_level",
     "BranchStats", "probe", "TraversalEngine", "DEFAULT_ENGINE",
     "register_backend", "available_backends", "lookup_batch", "update_batch",
-    "insert_batch", "remove_batch", "range_scan", "traverse_probe", "OpReport",
-    "lookup_variant", "VARIANTS",
+    "insert_batch", "remove_batch", "range_scan", "rebuild", "traverse_probe",
+    "OpReport", "BuildReport", "lookup_variant", "VARIANTS",
 ]

@@ -26,18 +26,19 @@ import jax
 import jax.numpy as jnp
 
 from .branch import BranchStats
-from .fbtree import EMPTY, FBTree, Level, TreeArrays, stack_levels
-from .keys import compare_padded, fnv1a_tags, pack_words_j
+from .fbtree import (BIG, EMPTY, FBTree, Level, TreeArrays,
+                     _device_build_from_sorted, chunk_of_pos, chunk_start,
+                     recompute_inner_meta, stack_levels)
+from .keys import (compare_padded, fnv1a_tags, lex_sort_indices_j,
+                   pack_words_j)
 from .leaf import probe
 from .traverse import TraversalEngine, resolve_engine
 
 __all__ = [
-    "OpReport", "lookup_batch", "update_batch", "insert_batch",
-    "remove_batch", "range_scan", "dedupe_last_wins", "traverse_path",
-    "traverse_probe",
+    "OpReport", "BuildReport", "lookup_batch", "update_batch", "insert_batch",
+    "remove_batch", "range_scan", "rebuild", "dedupe_last_wins",
+    "traverse_path", "traverse_probe",
 ]
-
-BIG = jnp.int32(2**30)
 
 
 class OpReport(NamedTuple):
@@ -148,45 +149,6 @@ def _seg_head_rank(sorted_ids: jnp.ndarray):
     head_pos = jnp.where(is_head, idx, 0)
     head_pos = jax.lax.associative_scan(jnp.maximum, head_pos)
     return is_head, idx - head_pos
-
-
-def _chunk_of_pos(p, base, rem):
-    cut = (base + 1) * rem
-    return jnp.where(p < cut, p // jnp.maximum(base + 1, 1),
-                     rem + (p - cut) // jnp.maximum(base, 1)).astype(jnp.int32)
-
-
-def _chunk_start(c, base, rem):
-    return jnp.where(c <= rem, c * (base + 1),
-                     rem * (base + 1) + (c - rem) * base).astype(jnp.int32)
-
-
-def _recompute_inner_meta(kb_store, kl_store, anchors, knum, fs):
-    """plen/prefix/features for rewritten inner nodes. anchors [R, ns]."""
-    R, ns = anchors.shape
-    L = kb_store.shape[-1]
-    aid = jnp.maximum(anchors, 0)
-    akb = kb_store[aid]                       # [R, ns, L]
-    akl = kl_store[aid]
-    lane = jnp.arange(ns, dtype=jnp.int32)[None, :]
-    valid = lane < knum[:, None]
-    first = akb[:, :1, :]
-    same = (akb == first) | ~valid[:, :, None]
-    allsame = same.all(axis=1)                # [R, L]
-    plen = jnp.where(allsame.all(-1), L,
-                     jnp.argmin(allsame.astype(jnp.int32), axis=-1))
-    minlen = jnp.min(jnp.where(valid, akl, BIG), axis=-1)
-    plen = jnp.minimum(plen, jnp.minimum(minlen, L)).astype(jnp.int32)
-    prefix = akb[:, 0, :]
-    feats = []
-    for f in range(fs):
-        pos = jnp.clip(plen + f, 0, L - 1)        # [R]
-        byte = jnp.take_along_axis(
-            akb, jnp.broadcast_to(pos[:, None, None], (R, ns, 1)), axis=-1)[..., 0]
-        byte = jnp.where(((plen + f)[:, None] < L) & valid, byte, 0)
-        feats.append(byte.astype(jnp.uint8))
-    features = jnp.stack(feats, axis=1)       # [R, fs, ns]
-    return plen, prefix, features
 
 
 # --------------------------------------------------------------------------
@@ -307,11 +269,11 @@ def _make_insert_round(cfg, max_ov: int, ins_cap: int,
         base = Tcnt // jnp.maximum(n_chunks, 1)
         rem = Tcnt - base * jnp.maximum(n_chunks, 1)
         pos = jnp.arange(T, dtype=jnp.int32)[None, :]
-        chunk = _chunk_of_pos(pos, base[:, None], rem[:, None])
+        chunk = chunk_of_pos(pos, base[:, None], rem[:, None])
         chunk = jnp.where(item_valid, jnp.minimum(chunk, c_max - 1), c_max - 1)
-        slot_in_chunk = pos - _chunk_start(chunk, base[:, None], rem[:, None])
+        slot_in_chunk = pos - chunk_start(chunk, base[:, None], rem[:, None])
         cidx = jnp.arange(c_max, dtype=jnp.int32)[None, :]
-        cstart = _chunk_start(cidx, base[:, None], rem[:, None])
+        cstart = chunk_start(cidx, base[:, None], rem[:, None])
         chunk_exists = (cidx < n_chunks[:, None]) & row_valid[:, None]
         csize = (base[:, None] + (cidx < rem[:, None])).astype(jnp.int32)
         cmin = jnp.take_along_axis(item_a, jnp.minimum(cstart, T - 1), axis=-1)
@@ -561,7 +523,7 @@ def _make_insert_round(cfg, max_ov: int, ins_cap: int,
 
         sub_anch = anchors_new[wn]
         sub_knum = knum_new[wn]
-        pl, pf, ft = _recompute_inner_meta(kb_store, kl_store, sub_anch,
+        pl, pf, ft = recompute_inner_meta(kb_store, kl_store, sub_anch,
                                            sub_knum, fs)
         plen_new = level.plen.at[wn].set(jnp.where(wm, pl, level.plen[wn]))
         prefix_new = level.prefix.at[wn].set(
@@ -689,3 +651,63 @@ def range_scan(tree: FBTree, qb, ql, max_items: int = 64,
         cur = jnp.where((nxt >= 0) & (emitted < max_items), nxt,
                         a.leaf_occ.shape[0] - 1)
     return out_kid[:, :max_items], out_val[:, :max_items], emitted, rearranged
+
+
+# --------------------------------------------------------------------------
+# rebuild — device-side bulk re-construction (DESIGN.md §5)
+# --------------------------------------------------------------------------
+
+class BuildReport(NamedTuple):
+    """Outcome of a device-side (re)build."""
+    n_live: jnp.ndarray     # int32 — keys carried into the new tree
+    n_leaves: jnp.ndarray   # int32 — leaves the fresh build allocated
+    reclaimed: jnp.ndarray  # int32 — key-pool rows freed (tombstones, dupes)
+    error: jnp.ndarray      # bool — capacity exceeded; discard the result
+
+
+@jax.jit
+def rebuild(tree: FBTree) -> Tuple[FBTree, BuildReport]:
+    """Compact a split-fragmented tree by re-running the device bulk build.
+
+    Gathers the live (key id, value) pairs from the leaves, sorts them on
+    device (packed-word lexsort, invalid slots last), re-packs the key pool
+    front-to-back, and reconstructs every level — tuple and stacked layouts
+    alike — through ``fbtree._device_build_from_sorted``. Entirely jnp, so it
+    composes under jit with the other batch ops.
+
+    Semantics w.r.t. the §2 protocol (DESIGN.md §5): a rebuild is a
+    bulk-synchronous barrier. Tombstoned keys are dropped and the pool is
+    compacted, so *key ids are not stable across a rebuild*; leaf versions
+    reset to zero and sibling links are relinked left-to-right. Results
+    cached from before the barrier (leaf ids, key ids, versions) must be
+    re-resolved by a fresh traversal. The output tree is exactly what
+    ``bulk_build`` (host or device) would produce from the live key set.
+    """
+    a, cfg = tree.arrays, tree.config
+    KC, L = cfg.key_cap, cfg.key_width
+    occ = a.leaf_occ.reshape(-1)                  # [(leaf_cap+1) * ns]
+    kid = jnp.where(occ, a.leaf_keyid.reshape(-1), EMPTY)
+    kid_safe = jnp.maximum(kid, 0)
+    lens = jnp.where(occ, a.key_lens[kid_safe], 0)
+    order = lex_sort_indices_j(a.key_bytes[kid_safe], lens,
+                               invalid=~occ)      # live slots first, sorted
+    n_live = occ.sum().astype(jnp.int32)
+    skid = jnp.maximum(jnp.take(kid, order), 0)
+    r = jnp.arange(order.shape[0], dtype=jnp.int32)
+    valid = r < n_live                            # n_live <= KC always
+    dst = jnp.where(valid, jnp.minimum(r, KC), KC)  # scratch row = KC
+    # invalid lanes all scatter 0/EMPTY-free zeros into the scratch row, so
+    # the duplicate writes are deterministic and the pool tail stays zero
+    kb = jnp.zeros((KC + 1, L), jnp.uint8).at[dst].set(
+        jnp.where(valid[:, None], a.key_bytes[skid], 0))
+    kl = jnp.zeros((KC + 1,), jnp.int32).at[dst].set(
+        jnp.where(valid, a.key_lens[skid], 0))
+    ktags = jnp.zeros((KC + 1,), jnp.uint8).at[dst].set(
+        jnp.where(valid, a.key_tags[skid], 0))
+    vv = jnp.zeros((KC + 1,), a.leaf_val.dtype).at[dst].set(
+        jnp.where(valid, jnp.take(a.leaf_val.reshape(-1), order), 0))
+    arrays, err = _device_build_from_sorted(cfg, kb, kl, ktags, vv, n_live)
+    rep = BuildReport(n_live=n_live, n_leaves=arrays.leaf_count,
+                      reclaimed=(a.key_count - n_live).astype(jnp.int32),
+                      error=err)
+    return FBTree(cfg, arrays), rep

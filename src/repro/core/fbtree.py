@@ -1,7 +1,7 @@
 """FB+-tree core structure (structure-of-arrays, JAX pytree).
 
 Layout mirrors the paper's node structures (Fig. 5) adapted to a pointer-free
-structure-of-arrays device representation:
+structure-of-arrays device representation (DESIGN.md §1):
 
 * inner level ``l`` (level 0 = root, fixed height — upper levels may be
   single-child chains so the compiled traversal is shape-static):
@@ -19,10 +19,19 @@ structure-of-arrays device representation:
 Anchor convention: ``anchors[i]`` is the minimum key of ``children[i]``'s
 subtree; child ``i`` covers ``[anchors[i], anchors[i+1])`` and keys below
 ``anchors[0]`` descend to child 0.
+
+Construction comes in two parity-locked flavors (DESIGN.md §5):
+:func:`bulk_build` is the host numpy reference; ``bulk_build(device=True)``
+runs the same algorithm as a jit-compatible jnp pipeline
+(:func:`_device_build_from_sorted`) whose only Python loop is over the
+O(log n) tree height. Both produce bit-identical ``TreeArrays``; the device
+core is also what ``core.batch_ops.rebuild`` re-invokes in-graph to compact
+a split-fragmented live tree.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, List, NamedTuple, Tuple
 
 import jax
@@ -32,13 +41,42 @@ import numpy as np
 from . import keys as K
 
 __all__ = ["TreeConfig", "Level", "FBTree", "bulk_build", "tree_to_device",
-           "stack_levels"]
+           "stack_levels", "chunk_start", "chunk_of_pos",
+           "recompute_inner_meta"]
 
 EMPTY = np.int32(-1)
+BIG = jnp.int32(2**30)
 
 
 @dataclasses.dataclass(frozen=True)
 class TreeConfig:
+    """Static tree geometry (hashable: rides through ``jax.jit`` as aux data).
+
+    Every array in :class:`TreeArrays` has a shape fully determined by this
+    config, so one config == one compiled specialization of every batched op.
+
+    Fields:
+
+    * ``key_width``   fixed key-pool row width ``L`` in bytes; keys are
+      zero-padded to it (order preserved via the length tie-break,
+      ``core.keys``).
+    * ``ns``          slots per leaf == anchors per inner node (paper
+      default 64).
+    * ``fs``          feature bytes per anchor (paper default 4).
+    * ``leaf_fill`` / ``inner_fill``  bulk-load & repack target occupancy;
+      builds chunk sorted runs into ``ceil(n / fill)`` balanced nodes.
+    * ``n_levels``    fixed inner height including root chain. Trees smaller
+      than the capacity plan keep the same height via single-child chain
+      nodes at the top (free pass-throughs, never billed in stats).
+    * ``leaf_cap`` / ``level_caps`` / ``key_cap``  allocation watermark caps;
+      arrays are padded to ``cap + 1`` rows, the extra row being the scratch
+      row masked scatters dump into (DESIGN.md §1).
+    * ``val_dtype``   leaf value dtype.
+    * ``stacked``     default descent layout for the traversal engine:
+      False = per-level tuple (Python loop), True = stacked
+      ``[n_levels, C_max, ...]`` arrays driven by one ``lax.scan``. Both
+      layouts are always materialized and kept coherent.
+    """
     key_width: int
     ns: int = 64           # slots / anchors per node (paper default 64)
     fs: int = 4            # feature bytes per anchor (paper default 4)
@@ -58,7 +96,13 @@ class TreeConfig:
     def plan(max_keys: int, key_width: int, ns: int = 64, fs: int = 4,
              leaf_fill: int = 48, inner_fill: int = 48,
              val_dtype: Any = jnp.int32, stacked: bool = False) -> "TreeConfig":
-        """Capacity planning: fixed height with min-fanout-16 safety margin."""
+        """Capacity planning: fixed height with min-fanout-16 safety margin.
+
+        Guarantees that any key set up to ``max_keys`` (and any tree holding
+        at most that many live keys, e.g. after a ``rebuild``) fits the caps:
+        ``leaf_cap = ceil(max_keys / max(8, leaf_fill // 3))`` and each inner
+        level cap is ``ceil(child_cap / 16)`` up to a single-node root.
+        """
         leaf_cap = max(2, -(-max_keys // max(8, leaf_fill // 3)))
         caps: List[int] = []
         c = leaf_cap
@@ -76,6 +120,14 @@ class TreeConfig:
 
 
 class Level(NamedTuple):
+    """One inner level, ``C = level_caps[l] + 1`` rows (last row = scratch).
+
+    Rows past ``count`` are zeroed pads (``knum=0``,
+    ``children=anchors=EMPTY``) that every backend treats as trivial nodes.
+    In the stacked layout (:func:`stack_levels`) the same six arrays gain a
+    leading ``n_levels`` axis and ``count`` becomes an ``int32[n_levels]``
+    vector.
+    """
     knum: jnp.ndarray      # int32 [C]
     plen: jnp.ndarray      # int32 [C]
     prefix: jnp.ndarray    # uint8 [C, L]
@@ -86,6 +138,26 @@ class Level(NamedTuple):
 
 
 class TreeArrays(NamedTuple):
+    """All tree state as a flat pytree of device arrays.
+
+    Shapes below use ``KC = key_cap + 1``, ``LC = leaf_cap + 1`` (the ``+1``
+    is the scratch row, DESIGN.md §1), ``L = key_width``, ``ns`` slots.
+
+    Invariants the parity/property suites check
+    (``tests/test_traverse_parity.py``, ``tests/test_tree_ops.py``):
+
+    * key-pool rows ``[0, key_count)`` hold valid keys; rows at or above the
+      watermark (and the scratch row) are zero.
+    * ``levels`` and ``stacked`` describe the same tree: re-deriving
+      ``stacked`` via :func:`stack_levels` is a no-op, and every
+      backend × layout combination descends to identical leaves with
+      identical machine-independent stats (DESIGN.md §3).
+    * each live key id appears in exactly one occupied leaf slot;
+      ``leaf_high``/``leaf_next`` order leaves ascending with the last
+      leaf's high key ``EMPTY`` (= +inf).
+    * ``leaf_version`` bumps on insert/remove but never on update
+      (paper §4.2); a fresh build resets versions to zero (DESIGN.md §5).
+    """
     key_bytes: jnp.ndarray   # uint8 [KC, L]
     key_lens: jnp.ndarray    # int32 [KC]
     key_tags: jnp.ndarray    # uint8 [KC] hash fingerprints (computed at append)
@@ -138,7 +210,9 @@ def stack_levels(levels: Tuple[Level, ...]) -> Level:
     Rows past a level's own cap are knum=0 / children=anchors=EMPTY, so a
     backend treats them as trivial nodes (well-formed descents never land on
     them). ``count`` becomes an int32 [n_levels] vector. Pure jnp: callable
-    under jit, so mutating ops can refresh the stacked copy in-graph.
+    under jit, so mutating ops can refresh the stacked copy in-graph. This is
+    the level-synchronous layout the ``lax.scan`` descent consumes
+    (DESIGN.md §3); both builders materialize it alongside ``levels``.
     """
     C_max = max(l.knum.shape[0] for l in levels)
 
@@ -159,6 +233,69 @@ def stack_levels(levels: Tuple[Level, ...]) -> Level:
         count=jnp.stack([l.count for l in levels]),
     )
 
+
+# --------------------------------------------------------------------------
+# shared segmented-construction primitives (host build, device build, and the
+# batch_ops split path all use these — DESIGN.md §5)
+# --------------------------------------------------------------------------
+
+def chunk_of_pos(p, base, rem):
+    """Chunk index of position ``p`` under balanced chunking.
+
+    ``n`` items over ``c`` chunks with ``base = n // c``, ``rem = n % c``:
+    the first ``rem`` chunks hold ``base + 1`` items, the rest ``base``.
+    """
+    cut = (base + 1) * rem
+    return jnp.where(p < cut, p // jnp.maximum(base + 1, 1),
+                     rem + (p - cut) // jnp.maximum(base, 1)).astype(jnp.int32)
+
+
+def chunk_start(c, base, rem):
+    """First item position of chunk ``c`` (inverse of :func:`chunk_of_pos`)."""
+    return jnp.where(c <= rem, c * (base + 1),
+                     rem * (base + 1) + (c - rem) * base).astype(jnp.int32)
+
+
+def recompute_inner_meta(kb_store, kl_store, anchors, knum, fs):
+    """Segmented reduction deriving ``plen``/``prefix``/``features`` for a
+    block of inner nodes from their anchor key ids. ``anchors`` is ``[R, ns]``
+    with ``EMPTY`` pads; invalid lanes contribute the identity.
+
+    The common-prefix length is the first byte column where some valid anchor
+    differs from anchor 0, clipped by the shortest anchor length and the key
+    width; feature row ``f`` is byte ``plen + f`` of every anchor (0 when past
+    the key width). Shared verbatim by the device build and the insert split
+    path so split-produced and built nodes agree byte-for-byte.
+    """
+    R, ns = anchors.shape
+    L = kb_store.shape[-1]
+    aid = jnp.maximum(anchors, 0)
+    akb = kb_store[aid]                       # [R, ns, L]
+    akl = kl_store[aid]
+    lane = jnp.arange(ns, dtype=jnp.int32)[None, :]
+    valid = lane < knum[:, None]
+    first = akb[:, :1, :]
+    same = (akb == first) | ~valid[:, :, None]
+    allsame = same.all(axis=1)                # [R, L]
+    plen = jnp.where(allsame.all(-1), L,
+                     jnp.argmin(allsame.astype(jnp.int32), axis=-1))
+    minlen = jnp.min(jnp.where(valid, akl, BIG), axis=-1)
+    plen = jnp.minimum(plen, jnp.minimum(minlen, L)).astype(jnp.int32)
+    prefix = akb[:, 0, :]
+    feats = []
+    for f in range(fs):
+        pos = jnp.clip(plen + f, 0, L - 1)        # [R]
+        byte = jnp.take_along_axis(
+            akb, jnp.broadcast_to(pos[:, None, None], (R, ns, 1)), axis=-1)[..., 0]
+        byte = jnp.where(((plen + f)[:, None] < L) & valid, byte, 0)
+        feats.append(byte.astype(jnp.uint8))
+    features = jnp.stack(feats, axis=1)       # [R, fs, ns]
+    return plen, prefix, features
+
+
+# --------------------------------------------------------------------------
+# host (numpy) build — the parity reference
+# --------------------------------------------------------------------------
 
 def _common_prefix_len(kb: np.ndarray, kl: np.ndarray) -> Tuple[int, np.ndarray]:
     """plen + prefix bytes over rows of a [k, L] anchor byte block."""
@@ -215,11 +352,43 @@ def _build_inner_level_np(cfg: TreeConfig, child_min_keyid: np.ndarray,
                 children=children, anchors=anchors, count=np.int32(n_nodes)), node_min
 
 
-def bulk_build(cfg: TreeConfig, ks: K.KeySet, vals: np.ndarray) -> FBTree:
-    """Bulk-load a tree from (possibly unsorted) unique keys. numpy host build."""
+def _check_capacity(cfg: TreeConfig, n: int) -> None:
+    """Host-side mirror of the device build's capacity checks."""
+    assert n <= cfg.key_cap, "key_cap exceeded"
+    assert cfg.leaf_fill <= cfg.ns and cfg.inner_fill <= cfg.ns, \
+        "fill targets cannot exceed ns slots (TreeConfig.plan clamps them)"
+    c = max(1, -(-n // cfg.leaf_fill))
+    assert c <= cfg.leaf_cap, "leaf_cap exceeded"
+    for lvl in range(cfg.n_levels - 1, -1, -1):
+        c = max(1, -(-c // cfg.inner_fill))
+        assert c <= cfg.level_caps[lvl], f"level {lvl}: {c} > cap"
+    assert c == 1, "tree too shallow for n_levels — use TreeConfig.plan"
+
+
+def bulk_build(cfg: TreeConfig, ks: K.KeySet, vals: np.ndarray,
+               device: bool = False) -> FBTree:
+    """Bulk-load a tree from (possibly unsorted) unique keys.
+
+    ``device=False`` (default) runs the numpy host reference: sort on host,
+    chunk the sorted run into balanced leaves, then group bottom-up into
+    inner levels, padding to the fixed height with single-child chain nodes.
+
+    ``device=True`` runs the jit-compatible device pipeline (DESIGN.md §5):
+    sort via packed-word ``jnp.lexsort``, build leaves and every inner level
+    with segmented jnp reductions (:func:`recompute_inner_meta`), the only
+    Python loop being over the O(log n) height. Both paths produce
+    bit-identical :class:`TreeArrays` (including the stacked layout) — the
+    equivalence tests in ``tests/test_tree_ops.py`` pin this contract.
+
+    Shapes: ``ks.bytes`` is ``uint8 [n, key_width]``, ``ks.lens`` ``int32
+    [n]``, ``vals`` ``[n]`` (cast to ``cfg.val_dtype``). Raises on capacity
+    overflow (``key_cap`` / ``leaf_cap`` / ``level_caps``).
+    """
     ns, fs, L = cfg.ns, cfg.fs, cfg.key_width
     n = ks.n
-    assert n <= cfg.key_cap, "key_cap exceeded"
+    _check_capacity(cfg, n)
+    if device:
+        return _bulk_build_device(cfg, ks, vals)
     order = K.lex_sort_indices(ks)
     # every array gets one trailing scratch row (index cap) so masked scatters
     # have a conflict-free dump target; the watermarks never reach it.
@@ -326,6 +495,132 @@ def bulk_build(cfg: TreeConfig, ks: K.KeySet, vals: np.ndarray) -> FBTree:
         leaf_ordered=jnp.asarray(np.arange(LC) < n_leaves),
         leaf_count=jnp.asarray(np.int32(n_leaves)),
     )
+    return FBTree(cfg, arrays)
+
+
+# --------------------------------------------------------------------------
+# device (jnp) build — jit-compatible, traced key count (DESIGN.md §5)
+# --------------------------------------------------------------------------
+
+def _device_build_from_sorted(cfg: TreeConfig, kb, kl, ktags, vals, n):
+    """Construct :class:`TreeArrays` from a sorted, compacted key pool.
+
+    Inputs are pool-shaped (``[key_cap + 1, ...]``) with rows ``[0, n)``
+    holding the keys in ascending order and zeros everywhere else; ``n`` may
+    be a *traced* int32 (the caller under jit — e.g.
+    ``core.batch_ops.rebuild`` — does not know the live count at trace
+    time). Returns ``(arrays, error)`` where ``error`` flags a capacity
+    overflow (arrays are then shape-valid garbage; callers must discard).
+
+    The pipeline (DESIGN.md §5): balanced chunking of the sorted run into
+    leaves via a pure gather grid (no scatter conflicts), then one bottom-up
+    pass per inner level — uniform grouping plus
+    :func:`recompute_inner_meta` segmented reductions. Grouping a
+    single-child run yields exactly the host build's chain-node padding, so
+    no special casing is needed for under-full trees and the result is
+    bit-identical to the host path.
+    """
+    ns, fs, L = cfg.ns, cfg.fs, cfg.key_width
+    KC = cfg.key_cap
+    LC = cfg.leaf_cap + 1
+    n = jnp.asarray(n, jnp.int32)
+    lane = jnp.arange(ns, dtype=jnp.int32)
+
+    # ---- leaves: balanced chunking of the sorted key run ----
+    n_leaves = jnp.maximum(1, -(-n // jnp.int32(cfg.leaf_fill)))
+    base, rem = n // n_leaves, n % n_leaves
+    li = jnp.arange(LC, dtype=jnp.int32)
+    lstart = chunk_start(li, base, rem)            # [LC]
+    lsize = base + (li < rem).astype(jnp.int32)
+    lexists = li < n_leaves
+    pos = lstart[:, None] + lane[None, :]          # key id at (leaf, slot)
+    lvalid = lexists[:, None] & (lane[None, :] < lsize[:, None]) & (pos < n)
+    pos_safe = jnp.clip(pos, 0, KC)
+    leaf_keyid = jnp.where(lvalid, pos, EMPTY)
+    leaf_val = jnp.where(lvalid, vals[pos_safe], 0).astype(cfg.val_dtype)
+    leaf_tags = jnp.where(lvalid, ktags[pos_safe], 0).astype(jnp.uint8)
+    nxt_ok = lexists & (li + 1 < n_leaves)
+    leaf_high = jnp.where(nxt_ok, chunk_start(li + 1, base, rem), EMPTY)
+    leaf_next = jnp.where(nxt_ok, li + 1, EMPTY)
+    # a chunk wider than ns would silently truncate at the lane mask — flag
+    # it (host path crashes loudly on the same fill > ns misconfiguration)
+    err = (n_leaves > cfg.leaf_cap) | (jnp.where(lexists, lsize, 0) > ns).any()
+
+    # ---- inner levels bottom-up (Python loop over the static height only);
+    # grouping a 1-child run reproduces the host chain padding exactly ----
+    child_min = jnp.where(lexists, lstart, 0)      # min key id per child
+    n_child = n_leaves
+    child_cap = LC
+    levels_rev: List[Level] = []
+    for lvl in range(cfg.n_levels - 1, -1, -1):
+        Cn = cfg.level_caps[lvl] + 1
+        n_nodes = jnp.maximum(1, -(-n_child // jnp.int32(cfg.inner_fill)))
+        nb, nr = n_child // n_nodes, n_child % n_nodes
+        ni = jnp.arange(Cn, dtype=jnp.int32)
+        nstart = chunk_start(ni, nb, nr)
+        nsize = nb + (ni < nr).astype(jnp.int32)
+        nexists = ni < n_nodes
+        cpos = nstart[:, None] + lane[None, :]     # child id at (node, slot)
+        nvalid = (nexists[:, None] & (lane[None, :] < nsize[:, None])
+                  & (cpos < n_child))
+        cpos_safe = jnp.clip(cpos, 0, child_cap - 1)
+        children = jnp.where(nvalid, cpos, EMPTY)
+        anchors = jnp.where(nvalid, child_min[cpos_safe], EMPTY)
+        knum = jnp.where(nexists, nsize, 0).astype(jnp.int32)
+        pl, pf, ft = recompute_inner_meta(kb, kl, anchors, knum, fs)
+        levels_rev.append(Level(
+            knum=knum,
+            plen=jnp.where(nexists, pl, 0).astype(jnp.int32),
+            prefix=jnp.where(nexists[:, None], pf, 0).astype(jnp.uint8),
+            features=jnp.where(nexists[:, None, None], ft, 0
+                               ).astype(jnp.uint8),
+            children=children, anchors=anchors,
+            count=n_nodes.astype(jnp.int32)))
+        err = err | (n_nodes > cfg.level_caps[lvl]) \
+            | (jnp.where(nexists, nsize, 0) > ns).any()
+        child_min = jnp.where(
+            nexists, child_min[jnp.clip(nstart, 0, child_cap - 1)], 0)
+        n_child = n_nodes
+        child_cap = Cn
+    err = err | (n_child != 1)                     # root must be one node
+    levels = tuple(levels_rev[::-1])
+
+    arrays = TreeArrays(
+        key_bytes=kb, key_lens=kl, key_tags=ktags,
+        key_count=n,
+        levels=levels,
+        stacked=stack_levels(levels),
+        leaf_tags=leaf_tags, leaf_keyid=leaf_keyid, leaf_val=leaf_val,
+        leaf_occ=lvalid,
+        leaf_high=leaf_high, leaf_next=leaf_next,
+        leaf_version=jnp.zeros((LC,), jnp.int32),
+        leaf_ordered=lexists,
+        leaf_count=n_leaves.astype(jnp.int32),
+    )
+    return arrays, err
+
+
+_device_build_jit = functools.partial(
+    jax.jit, static_argnames=("cfg",))(_device_build_from_sorted)
+
+
+def _bulk_build_device(cfg: TreeConfig, ks: K.KeySet, vals) -> FBTree:
+    """``bulk_build(device=True)`` body: device sort + jitted build core."""
+    n, L = ks.n, cfg.key_width
+    qb = jnp.asarray(ks.bytes)
+    ql = jnp.asarray(ks.lens).astype(jnp.int32)
+    order = K.lex_sort_indices_j(qb, ql)
+    kb = jnp.zeros((cfg.key_cap + 1, L), jnp.uint8).at[:n].set(qb[order])
+    kl = jnp.zeros((cfg.key_cap + 1,), jnp.int32).at[:n].set(ql[order])
+    ktags = jnp.zeros((cfg.key_cap + 1,), jnp.uint8).at[:n].set(
+        K.fnv1a_tags(qb, ql)[order])
+    vv = jnp.zeros((cfg.key_cap + 1,), cfg.val_dtype).at[:n].set(
+        jnp.asarray(vals).astype(cfg.val_dtype)[order])
+    arrays, err = _device_build_jit(cfg=cfg, kb=kb, kl=kl, ktags=ktags,
+                                    vals=vv, n=jnp.int32(n))
+    # _check_capacity already vetted n host-side; err re-validates on device
+    if bool(err):  # pragma: no cover - unreachable after _check_capacity
+        raise RuntimeError("bulk_build(device=True): capacity exceeded")
     return FBTree(cfg, arrays)
 
 

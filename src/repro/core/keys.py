@@ -25,6 +25,7 @@ __all__ = [
     "make_keyset",
     "pack_words",
     "lex_sort_indices",
+    "lex_sort_indices_j",
     "compare_padded",
     "fnv1a_tags",
 ]
@@ -125,6 +126,21 @@ def lex_sort_indices(ks: KeySet) -> np.ndarray:
     words = pack_words(ks.bytes)  # [N, W]
     cols = [ks.lens] + [words[:, i] for i in range(words.shape[1] - 1, -1, -1)]
     return np.lexsort(cols)
+
+
+def lex_sort_indices_j(kb, kl, invalid=None) -> "jnp.ndarray":
+    """jnp twin of :func:`lex_sort_indices`: device argsort of padded keys by
+    (bytes asc, length tie-break), optionally pushing rows flagged by the
+    bool mask ``invalid`` past every valid row. Single definition of the
+    device key order — the build and rebuild paths (DESIGN.md §5) must sort
+    identically for host/device parity to hold.
+    """
+    import jax.numpy as jnp
+    words = pack_words_j(kb)  # [N, W] order-preserving int32
+    cols = [kl] + [words[:, i] for i in range(words.shape[1] - 1, -1, -1)]
+    if invalid is not None:
+        cols.append(invalid.astype(jnp.int32))  # most significant: valid first
+    return jnp.lexsort(cols)
 
 
 def compare_padded(a_bytes: np.ndarray, a_len: np.ndarray,

@@ -38,7 +38,7 @@ SDS = jax.ShapeDtypeStruct
 
 
 def opt_for(cfg: ModelConfig) -> O.OptConfig:
-    # the 671B fits 512 chips only with factored second moments (DESIGN.md §5)
+    # the 671B fits 512 chips only with factored second moments
     total, _ = cfg.param_count()
     kind = "adafactor" if total > 100e9 else "adamw"
     return O.OptConfig(kind=kind)

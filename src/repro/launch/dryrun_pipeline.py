@@ -2,7 +2,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 """Pipeline-parallel dry-run: prove the GPipe shard_map/ppermute schedule
-lowers and compiles at production scale (opt-in PP config, DESIGN.md §5).
+lowers and compiles at production scale (opt-in PP config).
 
 Mesh: 4 pipeline stages × 128 chips; each stage applies a slice of a
 dense-block stack over the microbatched activations.

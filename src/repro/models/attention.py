@@ -11,7 +11,7 @@ iotas — the [S,T] mask and the [.., S, T] logits never materialize in HBM
 inner tile body is ``jax.checkpoint``-ed so backward recomputes tile
 probabilities flash-style instead of stashing them.
 
-Decode sharding note (DESIGN.md §5): when ``n_kv_heads`` doesn't divide the
+Decode sharding note: when ``n_kv_heads`` doesn't divide the
 model axis, the KV cache shards its *sequence* dim instead; the plain einsum
 decode below lets XLA turn that into flash-decoding style partial-softmax
 collectives automatically.
@@ -74,7 +74,7 @@ def attn_params(key, cfg: ModelConfig, dtype=None) -> Params:
     p = {"wq": dense_init(ks[0], d, H, hd, dtype=dtype),
          "wk": dense_init(ks[1], d, Hk, hd, dtype=dtype),
          "wv": dense_init(ks[2], d, Hk, hd, dtype=dtype),
-         # [H, hd, d] so either heads or head_dim can shard (DESIGN.md §5)
+         # [H, hd, d] so either heads or head_dim can shard
          "wo": (jax.random.truncated_normal(ks[3], -2.0, 2.0, (H, hd, d),
                                             jnp.float32)
                 * ((H * hd) ** -0.5)).astype(dtype)}

@@ -5,7 +5,7 @@ bounded one-hot dispatch/combine einsums. Simple, but the one-hot contractions
 cost 2·B·S·E·C·d MAC each — for DeepSeek dims that rivals the expert FFN
 itself (visible in the roofline's MODEL_FLOPS/HLO_FLOPs ratio).
 
-``scatter`` (optimized, DESIGN.md §7): slot assignment via a segmented-rank
+``scatter`` (optimized): slot assignment via a segmented-rank
 sort (cheap int ops), token gather by index (0 FLOPs, local under SPMD since
 the expert dim is a pure *output* dim of the gather), expert einsum, then a
 scatter-add combine whose cross-shard reduction is the same all-reduce a

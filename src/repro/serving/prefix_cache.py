@@ -12,6 +12,8 @@ All cache operations are *batched tree ops* on the FB+-tree core:
                       update path: value CAS, version untouched, readers
                       never restart)
   evict sweep      -> range_scan over the digest space
+  compact          -> rebuild (device-side bulk build, DESIGN.md §5):
+                      drops tombstones and split fragmentation online
 This is exactly the paper's skewed workload: shared system prompts ⇒ heavy
 key-prefix skew ⇒ the tree behaves trie-like (feature comparison wins).
 """
@@ -52,16 +54,22 @@ def chain_keys(tokens: np.ndarray, block_tokens: int) -> List[bytes]:
 class PrefixCache:
     def __init__(self, n_pages: int = 4096, block_tokens: int = 32,
                  max_keys: int = 1 << 16,
-                 engine: Optional[TraversalEngine] = None):
+                 engine: Optional[TraversalEngine] = None,
+                 compact_factor: float = 4.0):
         self.block_tokens = block_tokens
         self.engine = engine      # None -> core DEFAULT_ENGINE
         self.pool = PagePool(n_pages)
+        # auto-compact (device rebuild, DESIGN.md §5) once the tree holds
+        # compact_factor× more leaves than a fresh build of the live keys
+        # would; 0/None disables the trigger (compact() stays callable)
+        self.compact_factor = compact_factor
         cfg = TreeConfig.plan(
             max_keys=max_keys, key_width=KEY_W,
             stacked=(engine is not None and engine.layout == "stacked"))
         seed = K.make_keyset([b"\x00" * KEY_W], KEY_W)   # sentinel root key
         self.tree = bulk_build(cfg, seed, np.array([-1], np.int32))
-        self.stats = {"lookups": 0, "hits": 0, "inserts": 0, "evicts": 0}
+        self.stats = {"lookups": 0, "hits": 0, "inserts": 0, "evicts": 0,
+                      "rebuilds": 0}
 
     # ---------------------------------------------------------------- admit
     def match(self, requests: Sequence[np.ndarray]
@@ -114,6 +122,13 @@ class PrefixCache:
         new = ks_all[n_known_blocks:]
         if not new:
             return np.zeros((0,), np.int32)
+        # key-pool headroom guard: evicted digests tombstone leaf slots but
+        # only a rebuild reclaims their pool rows, and steady churn can march
+        # key_count to key_cap while the live set stays small — compact
+        # before appending would overflow (DESIGN.md §5)
+        if (int(self.tree.arrays.key_count) + len(new)
+                > self.tree.config.key_cap):
+            self.compact()
         ids = self.pool.alloc(len(new))
         if ids is None:
             self._evict(len(new) * 2)
@@ -151,6 +166,43 @@ class PrefixCache:
         self.tree, _ = B.remove_batch(self.tree, kb, kl, engine=self.engine)
         self.pool.evict(victims)
         self.stats["evicts"] += len(sel)
+        # cheap necessary condition first (leaf_count is a scalar pull;
+        # frag_factor costs a device reduction): need >= 1 leaves, so
+        # frag >= cf requires leaf_count >= cf
+        if (self.compact_factor
+                and int(self.tree.arrays.leaf_count) >= self.compact_factor
+                and self.frag_factor >= self.compact_factor):
+            self.compact()
+
+    # --------------------------------------------------------------- compact
+    @property
+    def frag_factor(self) -> float:
+        """Allocated leaves vs the minimum a fresh build would use.
+
+        Grows as splits allocate leaves that later drain through eviction;
+        can sit below 1 while in-place slot reuse keeps early leaves denser
+        than the ``leaf_fill`` build target (no compaction needed then).
+        """
+        live = self.tree.n_keys_live
+        need = max(1, -(-live // self.tree.config.leaf_fill))
+        return int(self.tree.arrays.leaf_count) / need
+
+    def compact(self) -> "B.BuildReport":
+        """Online rebuild (DESIGN.md §5): drop eviction tombstones, re-pack
+        the key pool, and rebuild all levels device-side in one batch op.
+
+        A bulk-synchronous barrier between serving batches — cached page ids
+        (the tree *values*) survive, but key ids/leaf ids/versions from
+        before the barrier are invalidated, which is fine here: match()
+        re-traverses from scratch every batch.
+        """
+        tree, rep = B.rebuild(self.tree)
+        if bool(rep.error):   # pragma: no cover - cfg.plan() sizes the caps
+            # error=True arrays are garbage (DESIGN.md §5) — keep the old tree
+            raise RuntimeError("prefix-cache rebuild exceeded tree capacity")
+        self.tree = tree
+        self.stats["rebuilds"] += 1
+        return rep
 
     def hit_rate(self) -> float:
         lk = max(self.stats["lookups"], 1)

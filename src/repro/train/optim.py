@@ -4,7 +4,7 @@ optimizer states.
 
 AdamW keeps f32 (m, v) + f32 master copies when params are bf16 (mixed
 precision). Adafactor keeps factored second moments only (row/col) — the
-memory plan that lets the 671B config fit 512 chips (DESIGN.md §5).
+memory plan that lets the 671B config fit 512 chips.
 State sharding: each state tensor inherits its param's spec; ZeRO-1
 additionally shards a free dim over "data" when divisible (zero_spec).
 """

@@ -3,7 +3,7 @@
 Microbatching (grad accumulation) runs as a ``lax.scan`` over microbatch
 slices with an f32 grad accumulator; because each microbatch's backward ends
 in reduce-scatter-able contributions, XLA overlaps the collectives of
-microbatch *i* with the compute of microbatch *i+1* (DESIGN.md §5 —
+microbatch *i* with the compute of microbatch *i+1* (see
 comm/compute overlap knob, exercised in §Perf). Optional int8+error-feedback
 gradient compression plugs in between accumulation and the update.
 """

@@ -55,6 +55,46 @@ def test_prefix_cache_eviction_under_pressure(rng):
     assert pc.stats["evicts"] > 0
 
 
+def test_prefix_cache_compaction(rng):
+    """Online rebuild (DESIGN.md §5): eviction churn fragments the tree;
+    compact() repacks it and cached lookups still resolve."""
+    pc = PrefixCache(n_pages=64, block_tokens=8, max_keys=4096,
+                     compact_factor=0)   # manual compaction only
+    for _ in range(10):                  # churn: publish + force evictions
+        toks = rng.integers(500, 1000, size=64).astype(np.int32)
+        hit, _ = pc.match([toks])
+        pc.publish(toks, hit[0])
+    assert pc.stats["evicts"] > 0
+    kept = rng.integers(0, 500, size=64).astype(np.int32)
+    assert pc.publish(kept, 0) is not None
+    leaves_before = int(pc.tree.arrays.leaf_count)
+    live_before = pc.tree.n_keys_live
+    rep = pc.compact()
+    assert pc.stats["rebuilds"] == 1
+    assert int(rep.n_live) == live_before
+    assert int(rep.reclaimed) > 0        # tombstoned digests dropped
+    assert int(pc.tree.arrays.leaf_count) <= leaves_before
+    hit, pages = pc.match([kept])        # cached pages survive the barrier
+    assert hit == [len(kept) // 8]
+    assert len(pages[0]) == len(kept) // 8
+    assert pc.frag_factor >= 1.0
+
+
+def test_prefix_cache_pool_headroom_compaction(rng):
+    """Steady churn appends a new pool row per distinct digest while evicted
+    digests only tombstone; the publish() headroom guard must compact
+    (reclaiming those rows) instead of letting insert_batch overflow the
+    pool and raise (DESIGN.md §5)."""
+    pc = PrefixCache(n_pages=32, block_tokens=8, max_keys=256,
+                     compact_factor=0)   # frag trigger off: isolate the guard
+    for _ in range(40):      # 40 waves x 8 blocks = 320 distinct digests
+        toks = rng.integers(0, 10**6, size=64).astype(np.int32)
+        hit, _ = pc.match([toks])
+        assert pc.publish(toks, hit[0]) is not None
+    assert pc.stats["rebuilds"] >= 1
+    assert int(pc.tree.arrays.key_count) <= 256
+
+
 def test_engine_end_to_end_prefix_reuse(rng):
     import jax
     from repro.configs import get_config

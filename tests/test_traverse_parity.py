@@ -105,6 +105,86 @@ def test_stacked_matches_tuple_after_inserts():
     assert (np.asarray(v_t) == np.asarray(v_s)).all()
 
 
+@settings(deadline=None, max_examples=6,
+          suppress_health_check=list(HealthCheck))
+@given(st.sampled_from(("rand-int", "3-gram", "ycsb", "twitter", "url")),
+       st.integers(0, 2**31 - 1))
+def test_device_built_tree_parity(ds_name, seed):
+    """A device-built tree is traversal-equivalent to the host-built tree
+    across ALL backend × layout combinations (DESIGN.md §5): same leaves,
+    same per-level children, and — for the stats-contract backends — the
+    same machine-independent counters as the host-tree reference."""
+    keys, width = make_dataset(ds_name, 500, seed=seed % 1000)
+    ks = K.make_keyset(keys, width)
+    cfg = TreeConfig.plan(max_keys=2 * len(keys), key_width=width)
+    vals = np.arange(len(keys), dtype=np.int32)
+    th = bulk_build(cfg, ks, vals)
+    td = bulk_build(cfg, ks, vals, device=True)
+
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, ks.n, size=160)
+    qb = ks.bytes[idx].copy()
+    ql = ks.lens[idx].copy()
+    flip = rng.random(160) < 0.3
+    qb[flip, -1] ^= 0xA5
+    qb, ql = jnp.asarray(qb), jnp.asarray(ql)
+
+    ref_leaf = None
+    all_combos = [(b, l) for b in ("jnp", "pallas", "binary", "binary+prefix")
+                  for l in ("tuple", "stacked")]
+    for backend, layout in all_combos:
+        eng = TraversalEngine(backend, layout)
+        h_leaf, h_path, h_stats = eng.traverse(th, qb, ql)
+        d_leaf, d_path, d_stats = eng.traverse(td, qb, ql)
+        assert (np.asarray(d_leaf) == np.asarray(h_leaf)).all(), \
+            (backend, layout, "leaf ids")
+        for lvl, (p, rp) in enumerate(zip(d_path, h_path)):
+            assert (np.asarray(p) == np.asarray(rp)).all(), \
+                (backend, layout, "children at level", lvl)
+        for f in STAT_FIELDS:
+            assert (np.asarray(getattr(d_stats, f))
+                    == np.asarray(getattr(h_stats, f))).all(), \
+                (backend, layout, f)
+        # stats-contract backends also agree with each other on leaf ids
+        if (backend, layout) in COMBOS:
+            if ref_leaf is None:
+                ref_leaf = np.asarray(d_leaf)
+            assert (np.asarray(d_leaf) == ref_leaf).all(), (backend, layout)
+
+
+def test_rebuild_preserves_engine_parity():
+    """After churn + rebuild, every backend × layout still agrees — the
+    rebuilt stacked copy must equal re-deriving it from the tuple levels."""
+    KW = 12
+    keys = [int(x) for x in range(0, 3000, 3)]
+    ks0 = K.make_keyset(keys[:100], KW)
+    cfg = TreeConfig.plan(max_keys=8192, key_width=KW, stacked=True)
+    t = bulk_build(cfg, ks0, np.arange(100, dtype=np.int32))
+    ks = K.make_keyset(keys[100:], KW)
+    t, rep, _ = B.insert_batch(t, ks.bytes, ks.lens,
+                               np.arange(100, 1000, dtype=np.int32))
+    assert int(rep.splits) > 0
+    rmk = K.make_keyset(keys[::4], KW)
+    t, _ = B.remove_batch(t, rmk.bytes, rmk.lens)
+    t, brep = B.rebuild(t)
+    assert not bool(brep.error)
+    restacked = stack_levels(t.arrays.levels)
+    for got, want in zip(t.arrays.stacked, restacked):
+        assert (np.asarray(got) == np.asarray(want)).all()
+    allk = K.make_keyset(keys, KW)
+    ref = None
+    for backend, layout in COMBOS:
+        v, r = B.lookup_batch(t, allk.bytes, allk.lens,
+                              engine=TraversalEngine(backend, layout))
+        sig = (np.asarray(v), np.asarray(r.found))
+        if ref is None:
+            ref = sig
+            expect = np.array([i % 4 != 0 for i in range(len(keys))])
+            assert (sig[1] == expect).all()
+        assert (sig[0] == ref[0]).all() and (sig[1] == ref[1]).all(), \
+            (backend, layout)
+
+
 def test_backend_registry():
     for name in ("jnp", "pallas", "binary", "binary+prefix"):
         assert name in available_backends()

@@ -1,4 +1,5 @@
 """FB+-tree batched ops vs a python dict oracle (randomized + hypothesis)."""
+import jax
 import numpy as np
 import pytest
 from hypothesis import HealthCheck, given, settings, strategies as st
@@ -8,6 +9,18 @@ from repro.core import keys as K
 from repro.core.fbtree import TreeConfig, bulk_build
 
 KW = 12
+
+
+def assert_trees_equal(ta, tb, label=""):
+    """Bit-exact TreeArrays equality (the DESIGN.md §5 parity contract)."""
+    la = jax.tree_util.tree_leaves(ta.arrays)
+    lb = jax.tree_util.tree_leaves(tb.arrays)
+    assert len(la) == len(lb)
+    for i, (a, b) in enumerate(zip(la, lb)):
+        a, b = np.asarray(a), np.asarray(b)
+        assert a.dtype == b.dtype, (label, i, a.dtype, b.dtype)
+        assert a.shape == b.shape, (label, i, a.shape, b.shape)
+        assert (a == b).all(), (label, f"array leaf {i} differs")
 
 
 def build(keys, vals, cap=None):
@@ -118,6 +131,79 @@ def test_version_semantics():
     assert (np.asarray(t2.arrays.leaf_version) == v0).all()
     t3, _ = B.remove_batch(t2, ks.bytes, ks.lens)
     assert np.asarray(t3.arrays.leaf_version).sum() > v0.sum()
+
+
+@settings(deadline=None, max_examples=10,
+          suppress_health_check=list(HealthCheck))
+@given(st.sets(st.binary(min_size=1, max_size=KW), min_size=1, max_size=300),
+       st.sampled_from((2, 4)))
+def test_device_build_equals_host(keyset, fs):
+    """bulk_build(device=True) is bit-identical to the host numpy build."""
+    keys = sorted(keyset)
+    vals = np.arange(len(keys), dtype=np.int32)
+    ks = K.make_keyset(keys, KW)
+    cfg = TreeConfig.plan(max_keys=max(64, 2 * len(keys)), key_width=KW,
+                          fs=fs)
+    th = bulk_build(cfg, ks, vals)
+    td = bulk_build(cfg, ks, vals, device=True)
+    assert_trees_equal(th, td, "host vs device build")
+
+
+@settings(deadline=None, max_examples=8,
+          suppress_health_check=list(HealthCheck))
+@given(st.data())
+def test_rebuild_then_traverse(data):
+    """rebuild() compacts a churned tree into exactly the tree a fresh
+    bulk_build of the live key set would produce, and lookups still match
+    the oracle afterwards."""
+    universe = [bytes([a, b]) for a in range(16, 48) for b in range(4)]
+    init = data.draw(st.sets(st.sampled_from(universe), min_size=8,
+                             max_size=60))
+    keys = sorted(init)
+    oracle = {k: i for i, k in enumerate(keys)}
+    t = build(keys, list(oracle.values()), cap=1024)
+    for _ in range(2):
+        ins = data.draw(st.lists(st.sampled_from(universe), min_size=1,
+                                 max_size=48))
+        ks = K.make_keyset(ins, KW)
+        vals = np.arange(len(ins), dtype=np.int32) + 5000
+        t, _, _ = B.insert_batch(t, ks.bytes, ks.lens, vals)
+        for i, k in enumerate(ins):
+            oracle[k] = int(vals[i])
+        rm = data.draw(st.lists(st.sampled_from(universe), min_size=1,
+                                max_size=24))
+        ks = K.make_keyset(rm, KW)
+        t, _ = B.remove_batch(t, ks.bytes, ks.lens)
+        for k in rm:
+            oracle.pop(k, None)
+
+    t2, rep = B.rebuild(t)
+    assert not bool(rep.error)
+    assert int(rep.n_live) == len(oracle)
+    # fresh-build leaf occupancy (a dense 64-key leaf may re-chunk into two)
+    fill = t.config.leaf_fill
+    assert int(t2.arrays.leaf_count) == max(1, -(-len(oracle) // fill))
+    assert int(t2.arrays.key_count) == len(oracle)   # pool re-packed
+    assert (np.asarray(t2.arrays.leaf_version) == 0).all()
+
+    got, found = lookup_all(t2, universe)
+    for i, k in enumerate(universe):
+        if k in oracle:
+            assert found[i] and got[i] == oracle[k], f"key {k!r} after rebuild"
+        else:
+            assert not found[i], f"phantom key {k!r} after rebuild"
+
+    # the rebuilt tree IS the bulk-built tree of the live set (host & device)
+    live = sorted(oracle)
+    ks = K.make_keyset(live, KW)
+    vals = np.asarray([oracle[k] for k in live], np.int32)
+    ref = bulk_build(t.config, ks, vals)
+    assert_trees_equal(t2, ref, "rebuild vs fresh host build")
+
+    # rebuild is idempotent
+    t3, rep3 = B.rebuild(t2)
+    assert int(rep3.reclaimed) == 0
+    assert_trees_equal(t3, t2, "rebuild idempotence")
 
 
 def test_capacity_error_raises():

@@ -1,0 +1,78 @@
+"""Doc-drift guard (CI): DESIGN.md anchors cited from code must exist.
+
+Code and docstrings cite design sections as ``DESIGN.md §N``; this script
+collects every such citation under src/, benchmarks/, tests/, tools/ and
+examples/ and fails if a cited section has no matching ``## §N`` heading in
+DESIGN.md — the cheap tripwire against renumbering or deleting a section
+while stale references linger. Also asserts the entry-point docs exist and
+that README.md still shows the tier-1 verify command.
+
+Usage: python tools/check_docs.py   (exit 0 = clean, 1 = drift, with a list)
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SCAN_DIRS = ("src", "benchmarks", "tests", "tools", "examples")
+CITE_RE = re.compile(r"DESIGN\.md\s+§(\d+)")
+ANCHOR_RE = re.compile(r"^##\s+§(\d+)\b", re.MULTILINE)
+TIER1 = "python -m pytest -x -q"
+
+
+def design_sections(design_path: str) -> set:
+    with open(design_path, encoding="utf-8") as f:
+        return {int(m) for m in ANCHOR_RE.findall(f.read())}
+
+
+def cited_sections(root: str):
+    """Yield (relpath, lineno, section) for every DESIGN.md §N citation."""
+    for d in SCAN_DIRS:
+        for dirpath, _, files in os.walk(os.path.join(root, d)):
+            for fn in files:
+                if not fn.endswith((".py", ".md")):
+                    continue
+                path = os.path.join(dirpath, fn)
+                with open(path, encoding="utf-8", errors="replace") as f:
+                    for i, line in enumerate(f, 1):
+                        for m in CITE_RE.finditer(line):
+                            yield (os.path.relpath(path, root), i,
+                                   int(m.group(1)))
+
+
+def main() -> int:
+    errors = []
+    design = os.path.join(ROOT, "DESIGN.md")
+    readme = os.path.join(ROOT, "README.md")
+    for path in (design, readme):
+        if not os.path.exists(path):
+            errors.append(f"missing entry-point doc: {os.path.basename(path)}")
+    if not errors:
+        sections = design_sections(design)
+        if not sections:
+            errors.append("DESIGN.md has no '## §N' section anchors")
+        n_cites = 0
+        for rel, lineno, sec in cited_sections(ROOT):
+            n_cites += 1
+            if sec not in sections:
+                errors.append(
+                    f"{rel}:{lineno}: cites DESIGN.md §{sec}, but DESIGN.md "
+                    f"only defines {sorted(sections)}")
+        with open(readme, encoding="utf-8") as f:
+            if TIER1 not in f.read():
+                errors.append(
+                    f"README.md no longer shows the tier-1 command ({TIER1})")
+    if errors:
+        print("doc-drift check FAILED:")
+        for e in errors:
+            print("  -", e)
+        return 1
+    print(f"doc-drift check OK ({n_cites} DESIGN.md citations, "
+          f"sections {sorted(sections)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
