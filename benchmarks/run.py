@@ -1,14 +1,20 @@
 """Benchmark driver: one module per paper table/figure.
 
   PYTHONPATH=src python -m benchmarks.run [--fast] [--only ycsb,...]
-      [--backend {jnp,pallas,...}] [--layout {tuple,stacked}]
+      [--backend {jnp,pallas,...}] [--layout {tuple,stacked}] [--smoke]
 
-``--backend``/``--layout`` select the traversal engine for the suites that
-descend the tree (ycsb, factor, traverse). The ``traverse`` suite A/Bs all
-backend×layout combinations regardless and writes ``BENCH_traverse.json``
-at the repo root; the ``build`` suite benchmarks host vs device
-``bulk_build`` (+ ``rebuild``) and merges its rows into the same file.
-Writes CSVs under out/bench/ and prints each table.
+``--suite`` is an alias for ``--only``. ``--backend``/``--layout`` apply
+to the engine-selecting suites (ycsb, factor); the traverse suite always
+A/Bs every backend×layout×stats combination. ``--smoke`` is the CI guard:
+tiny trees, one timing pass, all traversal backends (incl. the fused
+descent kernel in interpret mode) parity-checked — and
+``BENCH_traverse.json`` is left untouched so CI runs never overwrite the
+perf trajectory anchor.
+
+The ``traverse`` suite writes ``BENCH_traverse.json`` at the repo root;
+the ``build`` suite benchmarks host vs device ``bulk_build``
+(+ ``rebuild``) and merges its rows into the same file. Writes CSVs under
+out/bench/ and prints each table.
 """
 from __future__ import annotations
 
@@ -34,10 +40,10 @@ SUITES = {
                    n_keys=8_000 if fast else 20_000,
                    n_ops=8_192 if fast else 16_384, **eng),
                factor_analysis.COLUMNS),
-    "traverse": ("Engine A/B — traversal backends × layouts",
-                 lambda fast, **eng: traverse_bench.run(
+    "traverse": ("Engine A/B — traversal backends × layouts × stats",
+                 lambda fast, **kw: traverse_bench.run(
                      n_keys=8_000 if fast else 20_000,
-                     n_ops=8_192 if fast else 16_384),
+                     n_ops=8_192 if fast else 16_384, **kw),
                  traverse_bench.COLUMNS),
     "build": ("DESIGN.md §5 — host vs device bulk build + rebuild",
               lambda fast: traverse_bench.run_build(
@@ -81,6 +87,10 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--suite", default=None, help="alias for --only")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: tiny n, parity asserts across all "
+                         "backends; skips the BENCH_traverse.json write")
     ap.add_argument("--out", default="out/bench")
     ap.add_argument("--backend", default="jnp",
                     help="traversal branch backend (jnp, pallas, ...)")
@@ -88,12 +98,16 @@ def main(argv=None):
                                                        "stacked"),
                     help="descent layout (default: tree config)")
     args = ap.parse_args(argv)
-    names = args.only.split(",") if args.only else list(SUITES)
+    only = args.suite or args.only
+    names = only.split(",") if only else list(SUITES)
     os.makedirs(args.out, exist_ok=True)
+    failed = []
     for name in names:
         title, fn, cols = SUITES[name]
         eng = (dict(backend=args.backend, layout=args.layout)
                if name in _ENGINE_SUITES else {})
+        if args.smoke and name == "traverse":
+            eng["smoke"] = True
         t0 = time.time()
         try:
             rows = fn(args.fast, **eng)
@@ -102,6 +116,7 @@ def main(argv=None):
                   flush=True)
             import traceback
             traceback.print_exc()
+            failed.append(name)
             continue
         dt = time.time() - t0
         print(f"\n== {title}  [{name}, {dt:.1f}s]")
@@ -111,12 +126,16 @@ def main(argv=None):
             w = csv.DictWriter(f, fieldnames=cols, extrasaction="ignore")
             w.writeheader()
             w.writerows(rows)
+        if args.smoke:
+            continue  # never clobber the perf trajectory anchor from CI
         if name == "traverse":
             print("engine A/B written to", traverse_bench.write_json(rows))
         elif name == "build":
             print("build rows written to",
                   traverse_bench.write_json(build_rows=rows))
     print("\nCSV written to", args.out)
+    if failed:
+        raise SystemExit(f"suites failed: {', '.join(failed)}")
 
 
 if __name__ == "__main__":

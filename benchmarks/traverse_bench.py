@@ -1,15 +1,27 @@
-"""Traversal engine A/B: backends (jnp vs pallas-interpret) × layouts
-(tuple vs stacked) on identical trees and query streams — plus the build
+"""Traversal engine A/B: backends (jnp vs pallas-interpret vs the fused
+whole-descent kernel) × layouts (tuple vs stacked) × stats (on vs the
+stats-free hot path) on identical trees and query streams — plus the build
 benchmark (:func:`run_build`): host-numpy vs device-jnp ``bulk_build``
 across datasets and tree sizes, with a bit-exact parity cross-check
 (DESIGN.md §5).
 
-Cross-checks that every combination returns identical leaf ids and
+Cross-checks that every stats-on combination returns identical leaf ids and
 machine-independent counters (``key_compares``, ``suffix_bs``,
-``feat_rounds``) — the engine contract — then reports relative lookup
-throughput. Results also land in ``BENCH_traverse.json`` at the repo root
-(``rows`` = traversal A/B, ``build_rows`` = host-vs-device build) so the
-perf trajectory of future kernel PRs starts here.
+``feat_rounds``) and that every stats-off combination returns identical
+``found`` — the engine contract (the check runs the FULL lookup pipeline,
+descent + hashtag probe) — then reports relative throughput. Since PR 3
+the ``Mops`` column times the *engine descent* (``batch_ops.traverse_path``,
+the code the backends actually differ on) rather than the whole lookup, so
+``Mops`` is not comparable to pre-PR3 rows; the counter columns are
+unchanged and stay comparable. Results land in ``BENCH_traverse.json`` at
+the repo root (``rows`` = traversal A/B, ``build_rows`` = host-vs-device
+build) so the perf trajectory of future kernel PRs starts here.
+
+``smoke=True`` is the CI mode (`benchmarks/run.py --suite traverse
+--smoke`): tiny trees, one timing iteration, every backend including
+``fused`` in interpret mode — the parity asserts are the point; a
+kernel-path regression fails CI instead of rotting until the next bench
+run.
 """
 from __future__ import annotations
 
@@ -29,55 +41,80 @@ from repro.core.traverse import TraversalEngine
 from .common import build_tree, make_dataset, timed, zipf_indices
 
 COMBOS = [("jnp", "tuple"), ("jnp", "stacked"),
-          ("pallas", "tuple"), ("pallas", "stacked")]
+          ("pallas", "tuple"), ("pallas", "stacked"),
+          ("fused", "stacked")]
 
 
 def run(datasets=("ycsb", "url"), n_keys=20_000, n_ops=16_384,
-        seed=23) -> List[Dict]:
+        seed=23, smoke: bool = False) -> List[Dict]:
+    if smoke:
+        datasets = ("ycsb",)
+        n_keys, n_ops = 600, 512
     rows = []
     rng = np.random.default_rng(seed)
+    chunk = min(4096, n_ops)
     for ds in datasets:
         keys, width = make_dataset(ds, n_keys)
         tree, ks = build_tree(keys, width)
         idx = zipf_indices(rng, len(keys), n_ops, 0.99)
         qb, ql = jnp.asarray(ks.bytes[idx]), jnp.asarray(ks.lens[idx])
         ref = None
+        ref_found = None
         for backend, layout in COMBOS:
-            eng = TraversalEngine(backend=backend, layout=layout)
-            def fn():
-                outs = []
-                for off in range(0, n_ops, 4096):
-                    v, rep = B.lookup_batch(tree, qb[off:off + 4096],
-                                            ql[off:off + 4096], engine=eng)
-                    outs.append(v)
-                return outs
-            t = timed(fn)
-            _, rep = B.lookup_batch(tree, qb[:4096], ql[:4096], engine=eng)
-            sig = (np.asarray(rep.found), np.asarray(rep.key_compares),
-                   np.asarray(rep.suffix_bs), np.asarray(rep.feat_rounds))
-            if ref is None:
-                ref = sig
-            else:
-                for a, b, nm in zip(ref, sig, ("found", "key_compares",
-                                               "suffix_bs", "feat_rounds")):
-                    assert (a == b).all(), \
-                        f"{ds}: {backend}/{layout} diverges on {nm}"
-            rows.append({
-                "dataset": ds, "n_keys": len(keys), "n_ops": n_ops,
-                "backend": backend, "layout": layout,
-                "Mops": round(n_ops / t / 1e6, 3),
-                "key_cmp/op": round(float(rep.key_compares.mean()), 2),
-                "suffix_bs/op": round(float(rep.suffix_bs.mean()), 3),
-                "feat_rounds/op": round(float(rep.feat_rounds.mean()), 2),
-                "parity": "ok",
-            })
+            for stats_on in (True, False):
+                eng = TraversalEngine(backend=backend, layout=layout,
+                                      collect_stats=stats_on)
+                def fn():
+                    outs = []
+                    for off in range(0, n_ops, chunk):
+                        leaf, _, _ = B.traverse_path(tree, qb[off:off + chunk],
+                                                     ql[off:off + chunk],
+                                                     engine=eng)
+                        outs.append(leaf)
+                    return outs
+                t = timed(fn, warmup=1 if smoke else 2,
+                          iters=1 if smoke else 7)
+                _, rep = B.lookup_batch(tree, qb[:chunk], ql[:chunk],
+                                        engine=eng)
+                if stats_on:
+                    sig = (np.asarray(rep.found),
+                           np.asarray(rep.key_compares),
+                           np.asarray(rep.suffix_bs),
+                           np.asarray(rep.feat_rounds))
+                    if ref is None:
+                        ref, ref_found = sig, sig[0]
+                    else:
+                        for a, b, nm in zip(ref, sig,
+                                            ("found", "key_compares",
+                                             "suffix_bs", "feat_rounds")):
+                            assert (a == b).all(), \
+                                f"{ds}: {backend}/{layout} diverges on {nm}"
+                else:
+                    # stats-free contract: counters are zero by design,
+                    # found-ness must still match the stats-on reference
+                    assert (np.asarray(rep.found) == ref_found).all(), \
+                        f"{ds}: {backend}/{layout} stats-off diverges"
+                row = {
+                    "dataset": ds, "n_keys": len(keys), "n_ops": n_ops,
+                    "backend": backend, "layout": layout,
+                    "stats": "on" if stats_on else "off",
+                    "Mops": round(n_ops / t / 1e6, 3),
+                    "parity": "ok",
+                }
+                if stats_on:
+                    row.update({
+                        "key_cmp/op": round(float(rep.key_compares.mean()), 2),
+                        "suffix_bs/op": round(float(rep.suffix_bs.mean()), 3),
+                        "feat_rounds/op": round(float(rep.feat_rounds.mean()), 2),
+                    })
+                rows.append(row)
     return rows
 
 
 # n_keys/n_ops ride along so the trajectory anchor stays comparable across
 # PRs — counters like key_cmp/op shift with tree size, not just with code
-COLUMNS = ["dataset", "n_keys", "n_ops", "backend", "layout", "Mops",
-           "key_cmp/op", "suffix_bs/op", "feat_rounds/op", "parity"]
+COLUMNS = ["dataset", "n_keys", "n_ops", "backend", "layout", "stats",
+           "Mops", "key_cmp/op", "suffix_bs/op", "feat_rounds/op", "parity"]
 
 
 def run_build(datasets=("ycsb", "url"), sizes=(5_000, 20_000),

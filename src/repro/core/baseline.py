@@ -40,7 +40,8 @@ def _full_cmp(key_bytes, key_lens, aid, qb, ql, skip: jnp.ndarray = None):
 
 
 def branch_level_binary(level: Level, key_bytes, key_lens, node_ids, qb, ql,
-                        use_prefix: bool) -> Tuple[jnp.ndarray, BranchStats]:
+                        use_prefix: bool, collect_stats: bool = True,
+                        ) -> Tuple[jnp.ndarray, Optional[BranchStats]]:
     """Classic binary-search branch (optionally with +prefix suffix skip)."""
     B = node_ids.shape[0]
     ns = level.features.shape[-1]
@@ -75,7 +76,8 @@ def branch_level_binary(level: Level, key_bytes, key_lens, node_ids, qb, ql,
         go_right = c <= 0
         lo = jnp.where(active & go_right, mid + 1, lo)
         hi = jnp.where(active & ~go_right, mid, hi)
-        key_cmp = key_cmp + active.astype(jnp.int32)
+        if collect_stats:
+            key_cmp = key_cmp + active.astype(jnp.int32)
     idx = jnp.clip(lo - 1, 0, jnp.maximum(knum - 1, 0))
     idx = jnp.where(pcmp < 0, 0, idx)
     idx = jnp.where(pcmp > 0, jnp.maximum(knum - 1, 0), idx)
@@ -83,6 +85,8 @@ def branch_level_binary(level: Level, key_bytes, key_lens, node_ids, qb, ql,
     idx = jnp.where(trivial, 0, idx)
     child = jnp.take_along_axis(level.children[node_ids], idx[:, None], axis=-1)[:, 0]
 
+    if not collect_stats:
+        return child, None
     # modeled lines: control line + per compare (anchor-pointer line + key
     # line(s)); +prefix adds the prefix line but shortens the compared bytes.
     nzs = lambda x: jnp.where(trivial, 0, x).astype(jnp.int32)
@@ -149,11 +153,14 @@ def lookup_variant(tree: FBTree, qb, ql, variant: str = "feature+hash",
     if variant in ("base", "prefix"):
         eng = TraversalEngine(
             backend="binary" if variant == "base" else "binary+prefix",
-            layout=eng.layout)
+            layout=eng.layout, collect_stats=eng.collect_stats)
     node_ids, _, stats = eng.traverse(tree, qb, ql, sibling_check=True)
     if variant == "feature+hash":
-        found, slot, val, ls = probe(tree, node_ids, qb, ql)
+        found, slot, val, ls = probe(tree, node_ids, qb, ql,
+                                     collect_stats=eng.collect_stats)
     else:
         found, slot, val, ls = probe_leaf_binary(tree, node_ids, qb, ql)
+    if ls is None:
+        ls = LeafStats.zeros(node_ids.shape[0])
     return found, val, stats._replace(
         lines_touched=stats.lines_touched + ls.lines_touched), ls

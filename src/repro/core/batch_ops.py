@@ -55,8 +55,12 @@ class OpReport(NamedTuple):
 
 def _report(found, bstats: BranchStats, lstats=None, conflicts=0, splits=0,
             error=False):
+    """``bstats``/``lstats`` may be ``None`` (stats-free engines,
+    DESIGN.md §3): counters come back all-zero, ``found`` stays exact."""
     b = found.shape[0]
     z = jnp.zeros((b,), jnp.int32)
+    if bstats is None:
+        bstats = BranchStats.zeros(b)
     return OpReport(
         found=found,
         conflicts=jnp.asarray(conflicts, jnp.int32),
@@ -70,12 +74,14 @@ def _report(found, bstats: BranchStats, lstats=None, conflicts=0, splits=0,
     )
 
 
+@functools.partial(jax.jit, static_argnames=("sibling_check", "engine"))
 def traverse_path(tree: FBTree, qb, ql, sibling_check: bool = True,
                   engine: Optional[TraversalEngine] = None):
     """Root-to-leaf traversal recording the node id at every level.
 
     Delegates to the traversal engine (backend + layout selection); kept as
-    the stable call-site API for ops and benchmarks.
+    the stable call-site API for ops and benchmarks. Jitted (engine is
+    static), so benchmarks can time the bare descent without probe work.
     """
     return resolve_engine(engine).traverse(tree, qb, ql,
                                            sibling_check=sibling_check)
@@ -84,10 +90,22 @@ def traverse_path(tree: FBTree, qb, ql, sibling_check: bool = True,
 def _traverse_probe(tree: FBTree, qb, ql, engine, sibling_check=True):
     """The shared descend+probe pipeline every point op runs: one engine
     descent, one hashtag leaf probe. Returns
-    (leaf_ids, path, found, slot, val, branch_stats, leaf_stats)."""
-    leaf_ids, path, bstats = resolve_engine(engine).traverse(
+    (leaf_ids, path, found, slot, val, branch_stats, leaf_stats).
+
+    Descent backends exposing a fused traverse+probe entry (DESIGN.md §3,
+    e.g. ``"fused"``) collapse the whole pipeline into one kernel launch;
+    level backends run the engine descent followed by the probe. Stats may
+    be ``None`` under a stats-free engine — ``_report`` zero-fills.
+    """
+    eng = resolve_engine(engine)
+    fused = eng.probe_path()
+    if fused is not None:
+        return fused(tree, qb, ql, sibling_check=sibling_check,
+                     collect_stats=eng.collect_stats)
+    leaf_ids, path, bstats = eng.traverse(
         tree, qb, ql, sibling_check=sibling_check)
-    found, slot, val, lstats = probe(tree, leaf_ids, qb, ql)
+    found, slot, val, lstats = probe(tree, leaf_ids, qb, ql,
+                                     collect_stats=eng.collect_stats)
     return leaf_ids, path, found, slot, val, bstats, lstats
 
 

@@ -14,17 +14,25 @@ query's child index using:
      ``fs`` rows (paper line 23: prefix+feature bytes are skipped).
 
 Everything is pure jnp so the same code is the oracle for the Pallas kernel.
+
+Every backend takes a static ``collect_stats`` flag (threaded from
+``TraversalEngine.collect_stats``, DESIGN.md §3): with it off the counter
+arithmetic is never traced — backends return ``(child_ids, None)`` and the
+engine substitutes zeros — so the serving/throughput path pays nothing for
+the stats contract while leaf ids and paths stay bit-identical.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 
 from .fbtree import FBTree, Level
 from .keys import compare_padded
 
-__all__ = ["BranchStats", "branch_level", "traverse", "to_sibling"]
+__all__ = ["BranchStats", "branch_level", "suffix_binary_search", "traverse",
+           "to_sibling"]
 
 _SIBLING_HOPS = 2  # bounded hops; batch ops keep parents exact so 2 suffices
 
@@ -58,10 +66,57 @@ def _first_diff_cmp(a: jnp.ndarray, b: jnp.ndarray, nbytes: jnp.ndarray) -> jnp.
     return jnp.where(anynz, jnp.sign(first), 0).astype(jnp.int32)
 
 
+def suffix_binary_search(anchors, node_ids, key_bytes, key_lens, qb, ql, lo,
+                         hi, billed, ns: int, count_compares: bool):
+    """Binary search over anchor runs ``[lo, hi]``, lanes gated by ``billed``.
+
+    ``anchors`` is the level's FULL ``[C, ns]`` table — each round gathers
+    exactly one anchor id per lane (``anchors[node_ids, mid]``) instead of
+    materializing the ``[B, ns]`` anchor rows up front, so a level whose
+    batch never takes the fallback costs zero anchor traffic.
+
+    Runs a ``lax.while_loop`` whose trip count is ``ceil(log2(w))`` for the
+    widest *billed* run ``w`` — not a fixed ``ns.bit_length()`` unroll — so
+    batches whose branches all resolve via prefix/feature compare (or land
+    on trivial chain nodes) skip the compare rounds entirely. Lanes outside
+    ``billed`` have their runs zeroed: their result is overridden by the
+    prefix/trivial overrides downstream, so leaf ids stay bit-identical
+    while the dead gathers disappear. Returns ``(lo_final, key_cmp)`` with
+    ``key_cmp`` all-zero when ``count_compares`` is off.
+    """
+    B = lo.shape[0]
+    lo_b = jnp.where(billed, lo, 0)
+    hi_b = jnp.where(billed, hi + 1, 0)
+    key_cmp = jnp.zeros((B,), jnp.int32)
+
+    def cond(c):
+        return (c[0] < c[1]).any()
+
+    def body(c):
+        lo_b, hi_b, key_cmp = c
+        active = lo_b < hi_b
+        mid = jnp.clip((lo_b + hi_b) // 2, 0, ns - 1)
+        aid = anchors[node_ids, mid]             # one anchor id per lane
+        aid_safe = jnp.maximum(aid, 0)
+        c3 = compare_padded(key_bytes[aid_safe], key_lens[aid_safe], qb, ql)
+        go_right = c3 <= 0
+        lo_b = jnp.where(active & go_right, mid + 1, lo_b)
+        hi_b = jnp.where(active & ~go_right, mid, hi_b)
+        if count_compares:
+            key_cmp = key_cmp + active.astype(jnp.int32)
+        return lo_b, hi_b, key_cmp
+
+    lo_b, _, key_cmp = jax.lax.while_loop(cond, body, (lo_b, hi_b, key_cmp))
+    return lo_b, key_cmp
+
+
 def branch_level(level: Level, key_bytes: jnp.ndarray, key_lens: jnp.ndarray,
                  node_ids: jnp.ndarray, qb: jnp.ndarray, ql: jnp.ndarray,
-                 ) -> Tuple[jnp.ndarray, BranchStats]:
-    """Resolve child ids for a batch at one level. Returns (child_ids, stats)."""
+                 collect_stats: bool = True,
+                 ) -> Tuple[jnp.ndarray, Optional[BranchStats]]:
+    """Resolve child ids for a batch at one level. Returns (child_ids, stats);
+    stats is ``None`` when ``collect_stats`` is off (the engine substitutes
+    zeros — none of the counter arithmetic is traced)."""
     B = node_ids.shape[0]
     ns = level.features.shape[-1]
     fs = level.features.shape[-2]
@@ -69,6 +124,30 @@ def branch_level(level: Level, key_bytes: jnp.ndarray, key_lens: jnp.ndarray,
     lines_per_row = max(1, ns // 64)
 
     knum = level.knum[node_ids]
+
+    # all-trivial short-circuit: upper chain levels of an under-full
+    # fixed-height tree are single-child nodes for the WHOLE batch — the
+    # feature loop, prefix compare and suffix fallback are pure dead work
+    # there (idx is forced to 0, counters to 0). One reduction gates a
+    # lax.cond so those levels cost a single child gather.
+    def _trivial_level(_):
+        child = level.children[node_ids, 0]
+        return child, (BranchStats.zeros(B) if collect_stats else 0)
+
+    def _full_level(_):
+        c, s = _branch_level_full(level, key_bytes, key_lens, node_ids, knum,
+                                  qb, ql, collect_stats, ns, fs, L,
+                                  lines_per_row)
+        return c, (s if collect_stats else 0)
+
+    child, stats = jax.lax.cond((knum <= 1).all(), _trivial_level,
+                                _full_level, None)
+    return child, (stats if collect_stats else None)
+
+
+def _branch_level_full(level, key_bytes, key_lens, node_ids, knum, qb, ql,
+                       collect_stats, ns, fs, L, lines_per_row):
+    B = node_ids.shape[0]
     plen = level.plen[node_ids]
     prefix = level.prefix[node_ids]
     feats = level.features[node_ids]          # [B, fs, ns]
@@ -98,7 +177,8 @@ def branch_level(level: Level, key_bytes: jnp.ndarray, key_lens: jnp.ndarray,
         res_idx = jnp.clip(lo + cnt_less - 1, 0, jnp.maximum(knum - 1, 0))
         newly = none_eq & ~resolved
         idx = jnp.where(newly, res_idx, idx)
-        feat_rounds = feat_rounds + (~resolved).astype(jnp.int32)
+        if collect_stats:
+            feat_rounds = feat_rounds + (~resolved).astype(jnp.int32)
         resolved = resolved | none_eq
         eq = jnp.where(resolved[:, None], eq, m)
 
@@ -106,30 +186,19 @@ def branch_level(level: Level, key_bytes: jnp.ndarray, key_lens: jnp.ndarray,
     # a prefix mismatch (pcmp != 0) or a trivial single-child node decides the
     # branch outright, so those lanes are not billed for the fallback — same
     # accounting as the Pallas kernel path (its `resolved` already folds both
-    # in), keeping counters backend-independent.
+    # in), keeping counters backend-independent. Unbilled lanes also skip the
+    # search itself (suffix_binary_search zeroes their runs): their fallback
+    # result is unconditionally overridden below, so the skip is free.
     need_bs = ~resolved
     trivial = knum <= 1
     billed_bs = need_bs & (pcmp == 0) & ~trivial
     lo = jnp.argmax(eq, axis=-1).astype(jnp.int32)
     hi = (ns - 1 - jnp.argmax(eq[:, ::-1], axis=-1)).astype(jnp.int32)
-    lo_b, hi_b = lo, hi + 1
-    anchors = level.anchors[node_ids]         # [B, ns]
-    n_steps = max(1, ns.bit_length())
-    key_cmp = jnp.zeros((B,), jnp.int32)
-    for _ in range(n_steps):
-        active = lo_b < hi_b
-        mid = jnp.clip((lo_b + hi_b) // 2, 0, ns - 1)
-        aid = jnp.take_along_axis(anchors, mid[:, None], axis=-1)[:, 0]
-        aid_safe = jnp.maximum(aid, 0)
-        akb = key_bytes[aid_safe]
-        akl = key_lens[aid_safe]
-        c = compare_padded(akb, akl, qb, ql)  # anchor vs query
-        go_right = c <= 0
-        lo_b = jnp.where(active & go_right, mid + 1, lo_b)
-        hi_b = jnp.where(active & ~go_right, mid, hi_b)
-        key_cmp = key_cmp + (active & billed_bs).astype(jnp.int32)
+    lo_b, key_cmp = suffix_binary_search(
+        level.anchors, node_ids, key_bytes, key_lens, qb, ql, lo, hi,
+        billed_bs, ns, count_compares=collect_stats)
     bs_idx = jnp.clip(lo_b - 1, 0, jnp.maximum(knum - 1, 0))
-    idx = jnp.where(need_bs, bs_idx, idx)
+    idx = jnp.where(billed_bs, bs_idx, idx)
 
     # prefix mismatch overrides feature logic entirely
     idx = jnp.where(pcmp < 0, 0, idx)
@@ -140,8 +209,12 @@ def branch_level(level: Level, key_bytes: jnp.ndarray, key_lens: jnp.ndarray,
     # contribute to the paper-comparable counters.
     idx = jnp.where(trivial, 0, idx)
 
-    child = jnp.take_along_axis(level.children[node_ids], idx[:, None], axis=-1)[:, 0]
+    # one child id per lane — not the [B, ns] row gather the take_along_axis
+    # formulation forced
+    child = level.children[node_ids, idx]
 
+    if not collect_stats:
+        return child, None
     nz = lambda x: jnp.where(trivial, 0, x).astype(jnp.int32)
     kw_lines = (ql + 63) // 64  # modeled lines per full key compare
     stats = BranchStats(

@@ -3,12 +3,13 @@ from __future__ import annotations
 
 from typing import NamedTuple, Tuple
 
+import jax
 import jax.numpy as jnp
 
 from .fbtree import FBTree
 from .keys import fnv1a_tags
 
-__all__ = ["LeafStats", "probe", "find_free_slots"]
+__all__ = ["LeafStats", "probe", "verify_candidates", "find_free_slots"]
 
 
 class LeafStats(NamedTuple):
@@ -21,15 +22,60 @@ class LeafStats(NamedTuple):
         return LeafStats(z, z)
 
 
+def verify_candidates(a, cand: jnp.ndarray, kid: jnp.ndarray,
+                      qb: jnp.ndarray, ql: jnp.ndarray,
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact-match verification over the hashtag candidate mask.
+
+    Checks candidates one at a time in slot order (a ``lax.while_loop``
+    whose trip count is the deepest candidate rank any still-unmatched lane
+    needs — typically 1): per round one ``[B, L]`` key gather and compare,
+    instead of materializing all ``[B, ns, L]`` leaf key bytes. This is the
+    paper's line 36-38 claim executed literally — key cache lines are
+    touched *only* for candidates — and it is observationally identical to
+    the all-at-once verify: ``found``/``slot`` match bit for bit (first
+    matching candidate wins in both formulations; slot 0 when none).
+    """
+    B, ns = cand.shape
+    crank = jnp.cumsum(cand.astype(jnp.int32), axis=-1) - 1  # cand rank/slot
+    n_cand = cand.sum(-1).astype(jnp.int32)
+    lane = jnp.arange(ns, dtype=jnp.int32)[None, :]
+
+    def cond(c):
+        checked, found, _ = c
+        return ((~found) & (checked < n_cand)).any()
+
+    def body(c):
+        checked, found, slot = c
+        active = (~found) & (checked < n_cand)
+        is_k = cand & (crank == checked[:, None])
+        s = jnp.min(jnp.where(is_k, lane, ns), axis=-1)
+        s = jnp.where(active, jnp.minimum(s, ns - 1), 0)
+        kd = jnp.maximum(kid[jnp.arange(B), s], 0)
+        akb = a.key_bytes[kd]                               # [B, L]
+        akl = a.key_lens[kd]
+        eqk = (akb == qb).all(-1) & (akl == ql) & active
+        slot = jnp.where(eqk, s, slot)
+        return checked + active.astype(jnp.int32), found | eqk, slot
+
+    init = (jnp.zeros((B,), jnp.int32), jnp.zeros((B,), bool),
+            jnp.zeros((B,), jnp.int32))
+    _, found, slot = jax.lax.while_loop(cond, body, init)
+    return found, slot
+
+
 def probe(tree: FBTree, leaf_ids: jnp.ndarray, qb: jnp.ndarray, ql: jnp.ndarray,
+          collect_stats: bool = True,
           ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, LeafStats]:
     """Find each query's slot in its leaf.
 
     Returns (found [B]bool, slot [B]int32, val [B], stats). The hashtag filter
     narrows candidates exactly as the paper's ``compare_equal(tags, tag)``;
-    verification compares full key bytes (lines 36-38). The jnp oracle
-    verifies all candidates at once; the Pallas kernel (kernels/leaf_probe)
-    streams tag rows first and touches key lines only for candidates.
+    verification compares full key bytes (lines 36-38) candidate-by-candidate
+    (:func:`verify_candidates` — key lines touched only for candidates, both
+    here and in the Pallas wrapper ``kernels/leaf_probe``).
+    ``collect_stats=False`` skips the counter reductions and returns
+    ``stats=None`` (the candidate mask itself is load-bearing and stays).
     """
     a = tree.arrays
     ns = a.leaf_tags.shape[-1]
@@ -38,14 +84,11 @@ def probe(tree: FBTree, leaf_ids: jnp.ndarray, qb: jnp.ndarray, ql: jnp.ndarray,
     occ = a.leaf_occ[leaf_ids]
     cand = (tags == qtag[:, None]) & occ
     kid = a.leaf_keyid[leaf_ids]              # [B, ns]
-    kid_safe = jnp.maximum(kid, 0)
-    akb = a.key_bytes[kid_safe]               # [B, ns, L]
-    akl = a.key_lens[kid_safe]
-    eqfull = (akb == qb[:, None, :]).all(-1) & (akl == ql[:, None]) & cand
-    found = eqfull.any(-1)
-    slot = jnp.argmax(eqfull, axis=-1).astype(jnp.int32)
+    found, slot = verify_candidates(a, cand, kid, qb, ql)
     val = jnp.take_along_axis(a.leaf_val[leaf_ids], slot[:, None], axis=-1)[:, 0]
     val = jnp.where(found, val, 0)
+    if not collect_stats:
+        return found, slot, val, None
     n_cand = cand.sum(-1).astype(jnp.int32)
     kw_lines = (ql + 63) // 64
     stats = LeafStats(

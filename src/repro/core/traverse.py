@@ -1,38 +1,48 @@
-"""Unified scan-based traversal engine with pluggable branch backends.
+"""Unified traversal engine with pluggable branch *and* descent backends.
 
 Branch resolution — prefix compare + feature comparison + suffix binary
 search (paper §3.2–3.4) — is one reusable primitive applied identically at
 every inner level. This module is the single entry point for all
-root-to-leaf descent:
+root-to-leaf descent. Two backend kinds live in two registries
+(DESIGN.md §3):
 
-* **Backend registry** maps a name to a ``branch_level``-shaped function
-  ``fn(level, key_bytes, key_lens, node_ids, qb, ql) -> (child_ids, stats)``.
-  Built-ins:
+* **Level backends** resolve ONE inner level for a batch:
+  ``fn(level, key_bytes, key_lens, node_ids, qb, ql, collect_stats=...)
+  -> (child_ids, stats | None)``. Built-ins:
     - ``"jnp"``            pure-XLA oracle (``core.branch.branch_level``)
     - ``"pallas"``         Pallas feature-comparison kernel
                            (``kernels.feature_branch``; interpret mode
                            off-TPU, hardware kernel on TPU)
     - ``"binary"``         classic full-key binary search baseline
     - ``"binary+prefix"``  baseline with prefix skip
-  New kernels land here via :func:`register_backend` without touching op
-  code.
+  The engine loops them over levels in either layout: ``"tuple"`` unrolls a
+  Python loop over the per-level tuple, ``"stacked"`` runs one ``lax.scan``
+  over the padded ``[n_levels, C_max, ...]`` Level pytree.
 
-* **Layouts**: ``"tuple"`` descends the per-level tuple with an unrolled
-  Python loop (one XLA op chain per level — levels may have different node
-  counts). ``"stacked"`` runs one ``lax.scan`` over the padded
-  ``[n_levels, C_max, ...]`` Level pytree (level-synchronous batched
-  traversal over homogeneous node arrays, BS-tree style): the compiled
-  module carries a single level-step body regardless of tree height, and
-  ``BranchStats`` accumulate inside the scan carry.
+* **Descent backends** resolve the WHOLE root→leaf descent in one call —
+  they receive the tree (stacked levels + key pool + leaf arrays) and the
+  query batch, and own the per-level loop themselves:
+  ``fn(tree, qb, ql, sibling_check=..., collect_stats=...)
+  -> (leaf_ids, path, stats | None)``. Built-in: ``"fused"``
+  (``kernels.fused_descent`` — one pallas_call keeps the descent resident
+  on-core instead of relaunching a kernel per level). A descent backend may
+  also expose a fused traverse+probe entry (the hashtag leaf probe as the
+  kernel epilogue); ``core.batch_ops`` uses it to collapse descend+probe
+  into one launch. Descent backends always consume ``arrays.stacked``, so
+  the engine's ``layout`` field is ignored for them.
 
 ``TraversalEngine`` is a frozen (hashable) dataclass so it can ride along
 as a static jit argument; one engine value == one compiled specialization.
+Its static ``collect_stats`` flag is threaded into every backend: with it
+off, none of the ``BranchStats`` counter arithmetic is traced (the engine
+returns zeros) while leaf ids and paths stay bit-identical — the
+stats-free hot path serving and throughput benchmarks run on.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,21 +51,42 @@ from .branch import BranchStats, branch_level, to_sibling
 from .fbtree import FBTree, Level
 
 __all__ = [
-    "TraversalEngine", "DEFAULT_ENGINE", "register_backend", "get_backend",
-    "available_backends", "resolve_engine",
+    "TraversalEngine", "DEFAULT_ENGINE", "DescentBackend",
+    "register_backend", "get_backend", "register_descent_backend",
+    "get_descent_backend", "available_backends", "backend_kind",
+    "resolve_engine",
 ]
 
-# fn(level, key_bytes, key_lens, node_ids, qb, ql) -> (child_ids, stats)
-BackendFn = Callable[..., Tuple[jnp.ndarray, BranchStats]]
+# fn(level, key_bytes, key_lens, node_ids, qb, ql, collect_stats=...)
+#   -> (child_ids, stats | None)
+BackendFn = Callable[..., Tuple[jnp.ndarray, Optional[BranchStats]]]
 
 _BACKENDS: Dict[str, BackendFn] = {}
 _LAZY_BACKENDS: Dict[str, Callable[[], BackendFn]] = {}
 
 
+class DescentBackend(NamedTuple):
+    """A whole-descent backend (DESIGN.md §3).
+
+    ``traverse(tree, qb, ql, sibling_check=..., collect_stats=...)``
+      -> (leaf_ids, path, stats | None) — ``path[l]`` is each query's node
+      id at level ``l``, matching ``TraversalEngine.traverse``.
+    ``traverse_probe`` (optional) additionally fuses the hashtag leaf probe
+      as the epilogue: ``(tree, qb, ql, sibling_check=..., collect_stats=...)
+      -> (leaf_ids, path, found, slot, val, bstats | None, lstats | None)``.
+    """
+    traverse: Callable
+    traverse_probe: Optional[Callable] = None
+
+
+_DESCENT: Dict[str, DescentBackend] = {}
+_LAZY_DESCENT: Dict[str, Callable[[], DescentBackend]] = {}
+
+
 def register_backend(name: str, fn: BackendFn = None, *,
                      loader: Callable[[], BackendFn] = None) -> None:
-    """Register a branch backend (eagerly, or via a deferred ``loader`` for
-    backends whose import is heavy or optional)."""
+    """Register a per-level branch backend (eagerly, or via a deferred
+    ``loader`` for backends whose import is heavy or optional)."""
     assert (fn is None) != (loader is None), "pass exactly one of fn/loader"
     if fn is not None:
         _BACKENDS[name] = fn
@@ -64,18 +95,53 @@ def register_backend(name: str, fn: BackendFn = None, *,
         _LAZY_BACKENDS[name] = loader
 
 
+def register_descent_backend(name: str, backend: DescentBackend = None, *,
+                             loader: Callable[[], DescentBackend] = None,
+                             ) -> None:
+    """Register a whole-descent backend (same eager/lazy split as
+    :func:`register_backend`)."""
+    assert (backend is None) != (loader is None), \
+        "pass exactly one of backend/loader"
+    if backend is not None:
+        _DESCENT[name] = backend
+        _LAZY_DESCENT.pop(name, None)
+    else:
+        _LAZY_DESCENT[name] = loader
+
+
 def get_backend(name: str) -> BackendFn:
     if name not in _BACKENDS:
         if name not in _LAZY_BACKENDS:
             raise KeyError(
-                f"unknown traversal backend {name!r}; "
-                f"available: {sorted(set(_BACKENDS) | set(_LAZY_BACKENDS))}")
+                f"unknown level backend {name!r}; "
+                f"available: {available_backends()}")
         _BACKENDS[name] = _LAZY_BACKENDS.pop(name)()
     return _BACKENDS[name]
 
 
+def get_descent_backend(name: str) -> DescentBackend:
+    if name not in _DESCENT:
+        if name not in _LAZY_DESCENT:
+            raise KeyError(
+                f"unknown descent backend {name!r}; "
+                f"available: {available_backends()}")
+        _DESCENT[name] = _LAZY_DESCENT.pop(name)()
+    return _DESCENT[name]
+
+
 def available_backends() -> List[str]:
-    return sorted(set(_BACKENDS) | set(_LAZY_BACKENDS))
+    return sorted(set(_BACKENDS) | set(_LAZY_BACKENDS)
+                  | set(_DESCENT) | set(_LAZY_DESCENT))
+
+
+def backend_kind(name: str) -> str:
+    """``"level"`` or ``"descent"`` (KeyError if unregistered)."""
+    if name in _DESCENT or name in _LAZY_DESCENT:
+        return "descent"
+    if name in _BACKENDS or name in _LAZY_BACKENDS:
+        return "level"
+    raise KeyError(f"unknown traversal backend {name!r}; "
+                   f"available: {available_backends()}")
 
 
 def _load_pallas_backend() -> BackendFn:
@@ -88,24 +154,35 @@ def _load_binary_backend(use_prefix: bool) -> BackendFn:
     return functools.partial(branch_level_binary, use_prefix=use_prefix)
 
 
+def _load_fused_backend() -> DescentBackend:
+    from repro.kernels.fused_descent.ops import (fused_traverse,
+                                                 fused_traverse_probe)
+    return DescentBackend(fused_traverse, fused_traverse_probe)
+
+
 register_backend("jnp", branch_level)
 register_backend("pallas", loader=_load_pallas_backend)
 register_backend("binary", loader=functools.partial(_load_binary_backend, False))
 register_backend("binary+prefix",
                  loader=functools.partial(_load_binary_backend, True))
+register_descent_backend("fused", loader=_load_fused_backend)
 
 LAYOUTS = ("tuple", "stacked")
 
 
 @dataclasses.dataclass(frozen=True)
 class TraversalEngine:
-    """Root-to-leaf descent strategy: (backend, layout).
+    """Root-to-leaf descent strategy: (backend, layout, collect_stats).
 
     ``layout=None`` defers to ``tree.config.stacked`` at trace time, so one
-    engine value serves trees of either default layout.
+    engine value serves trees of either default layout (descent backends
+    ignore layout — they always consume the stacked pytree).
+    ``collect_stats=False`` compiles the stats machinery to nothing: the
+    returned ``BranchStats`` are all-zero, leaf ids/paths bit-identical.
     """
     backend: str = "jnp"
     layout: Optional[str] = None
+    collect_stats: bool = True
 
     def __post_init__(self):
         # fail at construction, not deep inside the first jit trace
@@ -116,8 +193,19 @@ class TraversalEngine:
             raise ValueError(f"unknown layout {self.layout!r}; "
                              f"expected one of {LAYOUTS} or None")
 
+    @property
+    def kind(self) -> str:
+        return backend_kind(self.backend)
+
     def resolve_layout(self, tree: FBTree) -> str:
         return self.layout or ("stacked" if tree.config.stacked else "tuple")
+
+    def probe_path(self) -> Optional[Callable]:
+        """Fused traverse+probe entry of a descent backend, or None — the
+        hook ``core.batch_ops._traverse_probe`` collapses to one launch."""
+        if self.kind != "descent":
+            return None
+        return get_descent_backend(self.backend).traverse_probe
 
     def traverse(self, tree: FBTree, qb: jnp.ndarray, ql: jnp.ndarray,
                  sibling_check: bool = True,
@@ -125,9 +213,17 @@ class TraversalEngine:
         """Descend all inner levels. Returns (leaf_ids, path, stats) where
         ``path[l]`` is each query's node id AT level ``l`` (root first) —
         the parent chain the split path propagates anchors through."""
+        B = qb.shape[0]
+        cs = self.collect_stats
+
+        if self.kind == "descent":
+            d = get_descent_backend(self.backend)
+            leaf_ids, path, stats = d.traverse(
+                tree, qb, ql, sibling_check=sibling_check, collect_stats=cs)
+            return leaf_ids, path, stats if cs else BranchStats.zeros(B)
+
         a = tree.arrays
         fn = get_backend(self.backend)
-        B = qb.shape[0]
         node_ids = jnp.zeros((B,), jnp.int32)   # root = node 0 of level 0
         stats = BranchStats.zeros(B)
 
@@ -136,20 +232,33 @@ class TraversalEngine:
             for level in a.levels:
                 path.append(node_ids)
                 node_ids, s = fn(level, a.key_bytes, a.key_lens, node_ids,
-                                 qb, ql)
-                stats = stats + s
-        else:
+                                 qb, ql, collect_stats=cs)
+                if cs:
+                    stats = stats + s
+        elif cs:
             def step(carry, level: Level):
                 ids, st = carry
-                child, s = fn(level, a.key_bytes, a.key_lens, ids, qb, ql)
+                child, s = fn(level, a.key_bytes, a.key_lens, ids, qb, ql,
+                              collect_stats=True)
                 return (child, st + s), ids
             (node_ids, stats), path_arr = jax.lax.scan(
                 step, (node_ids, stats), a.stacked)
             path = [path_arr[l] for l in range(len(a.levels))]
+        else:
+            # stats-free scan: the carry is just the node ids — the stats
+            # pytree never enters the compiled loop at all
+            def step(ids, level: Level):
+                child, _ = fn(level, a.key_bytes, a.key_lens, ids, qb, ql,
+                              collect_stats=False)
+                return child, ids
+            node_ids, path_arr = jax.lax.scan(step, node_ids, a.stacked)
+            path = [path_arr[l] for l in range(len(a.levels))]
 
         if sibling_check:
             node_ids, hops = to_sibling(tree, node_ids, qb, ql)
-            stats = stats._replace(sibling_hops=stats.sibling_hops + hops)
+            if cs:
+                stats = stats._replace(
+                    sibling_hops=stats.sibling_hops + hops)
         return node_ids, path, stats
 
 

@@ -21,7 +21,9 @@ Outputs:
   idx      [B, 1] int32  resolved child index (valid where resolved)
   resolved [B, 1] int32  1 = branch decided without suffix binary search
   run_lo/run_hi [B,1]    surviving equal-run bounds for the fallback search
-  rounds   [B, 1] int32  feature rows consumed (paper-comparable counter)
+  rounds   [B, 1] int32  feature rows consumed (paper-comparable counter) —
+                         omitted when ``collect_stats=False`` (the stats-free
+                         hot path compiles without the counter accumulator)
 """
 from __future__ import annotations
 
@@ -35,15 +37,34 @@ from jax.experimental.pallas import tpu as pltpu
 DEFAULT_TILE_B = 256
 
 
-def _kernel(feats_ref, qfeat_ref, knum_ref, pcmp_ref,
-            idx_ref, resolved_ref, lo_ref, hi_ref, rounds_ref, *, fs: int,
-            ns: int):
-    feats = feats_ref[...]                      # [TB, fs, ns] uint8
-    qfeat = qfeat_ref[...]                      # [TB, fs] uint8
-    knum = knum_ref[...]                        # [TB, 1] int32
-    pcmp = pcmp_ref[...]                        # [TB, 1] int32
-    TB = feats.shape[0]
+def auto_tile(B: int, cap: int, floor: int = 8) -> int:
+    """Largest power-of-two tile ≤ min(B, cap), floored at ``floor``.
 
+    A B=32 serving batch gets tile_b=32 (pad-free) instead of being padded
+    to the 256/512 throughput tile; odd batches pad only to the next tile
+    boundary below ``cap``.
+    """
+    t = floor
+    while t * 2 <= min(B, cap):
+        t *= 2
+    return t
+
+
+def feature_compare_rounds(feats, qfeat, knum, pcmp, *, fs: int, ns: int,
+                           collect_stats: bool):
+    """The in-kernel feature-comparison round loop (paper Fig. 6 l.7-19),
+    [TB, 1]-keepdims masked-iota formulation. SHARED between the per-level
+    kernel below and the fused whole-descent kernel
+    (``kernels/fused_descent``) — the parity contract requires both to be
+    bit-identical, so there is exactly one definition.
+
+    Returns ``(idx, resolved, run_lo, run_hi, rounds)``; the prefix/trivial
+    overrides are folded in (``resolved`` includes ``pcmp != 0`` and
+    ``knum <= 1``), so ``~resolved`` is exactly the billed suffix-fallback
+    lane set and ``rounds`` is already zeroed on trivial nodes. ``rounds``
+    stays all-zero (and costs nothing) when ``collect_stats`` is off.
+    """
+    TB = feats.shape[0]
     lane = jax.lax.broadcasted_iota(jnp.int32, (TB, ns), 1)
     valid = lane < knum                         # [TB, ns]
     eq = valid
@@ -63,7 +84,8 @@ def _kernel(feats_ref, qfeat_ref, knum_ref, pcmp_ref,
         res_idx = jnp.clip(lo + cnt_less - 1, 0, kmax)
         newly = none_eq & ~resolved
         idx = jnp.where(newly, res_idx, idx)
-        rounds = rounds + (~resolved).astype(jnp.int32)
+        if collect_stats:
+            rounds = rounds + (~resolved).astype(jnp.int32)
         resolved = resolved | none_eq
         eq = jnp.where(resolved, eq, m)
 
@@ -76,24 +98,38 @@ def _kernel(feats_ref, qfeat_ref, knum_ref, pcmp_ref,
     trivial = knum <= 1
     idx = jnp.where(trivial, 0, idx)
     resolved = resolved | trivial
-    rounds = jnp.where(trivial, 0, rounds)
-
-    idx_ref[...] = idx
-    resolved_ref[...] = resolved.astype(jnp.int32)
-    lo_ref[...] = run_lo
-    hi_ref[...] = run_hi
-    rounds_ref[...] = rounds
+    if collect_stats:
+        rounds = jnp.where(trivial, 0, rounds)
+    return idx, resolved, run_lo, run_hi, rounds
 
 
-@functools.partial(jax.jit, static_argnames=("tile_b", "interpret"))
+def _kernel(feats_ref, qfeat_ref, knum_ref, pcmp_ref, *out_refs, fs: int,
+            ns: int, collect_stats: bool):
+    idx, resolved, run_lo, run_hi, rounds = feature_compare_rounds(
+        feats_ref[...], qfeat_ref[...], knum_ref[...], pcmp_ref[...],
+        fs=fs, ns=ns, collect_stats=collect_stats)
+    out_refs[0][...] = idx
+    out_refs[1][...] = resolved.astype(jnp.int32)
+    out_refs[2][...] = run_lo
+    out_refs[3][...] = run_hi
+    if collect_stats:
+        out_refs[4][...] = rounds
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile_b", "interpret", "collect_stats"))
 def feature_branch_kernel(feats, qfeat, knum, pcmp, tile_b: int = DEFAULT_TILE_B,
-                          interpret: bool = True):
-    """B must be a multiple of tile_b (ops.py pads)."""
+                          interpret: bool = True, collect_stats: bool = True):
+    """B must be a multiple of tile_b (ops.py pads). With
+    ``collect_stats=False`` the rounds output (and its in-kernel
+    accumulator) is dropped — 4 outputs instead of 5."""
     B, fs, ns = feats.shape
     assert B % tile_b == 0, (B, tile_b)
     grid = (B // tile_b,)
-    out_sds = [jax.ShapeDtypeStruct((B, 1), jnp.int32)] * 5
-    kern = functools.partial(_kernel, fs=fs, ns=ns)
+    n_out = 5 if collect_stats else 4
+    out_sds = [jax.ShapeDtypeStruct((B, 1), jnp.int32)] * n_out
+    kern = functools.partial(_kernel, fs=fs, ns=ns,
+                             collect_stats=collect_stats)
     vec = lambda blk: pl.BlockSpec(blk, lambda i: (i,) + (0,) * (len(blk) - 1),
                                    memory_space=pltpu.VMEM)
     return pl.pallas_call(
@@ -101,7 +137,7 @@ def feature_branch_kernel(feats, qfeat, knum, pcmp, tile_b: int = DEFAULT_TILE_B
         grid=grid,
         in_specs=[vec((tile_b, fs, ns)), vec((tile_b, fs)),
                   vec((tile_b, 1)), vec((tile_b, 1))],
-        out_specs=[vec((tile_b, 1))] * 5,
+        out_specs=[vec((tile_b, 1))] * n_out,
         out_shape=out_sds,
         interpret=interpret,
     )(feats, qfeat, knum, pcmp)

@@ -2,19 +2,23 @@
 
 Registered as the ``"pallas"`` backend in the traversal-engine registry
 (``core.traverse``) — drop-in for core.branch.branch_level with identical
-BranchStats accounting. The gather / prefix-compare / suffix-binary-search
-stages run in XLA, the feature-comparison hot loop in Pallas (interpret
-mode off-TPU).
+BranchStats accounting (and the same static ``collect_stats`` switch). The
+gather / prefix-compare stages run in XLA, the feature-comparison hot loop
+in Pallas (interpret mode off-TPU), and the suffix fallback shares
+``core.branch.suffix_binary_search``: a while-loop bounded by the widest
+surviving equal run, so levels where no lane needs the fallback (e.g.
+single-child chain levels, knum <= 1 everywhere) skip the anchor-gather
+compare rounds entirely instead of burning ``ns.bit_length()`` dead rounds.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.branch import BranchStats, _first_diff_cmp
-from repro.core.keys import compare_padded
+from repro.core.branch import (BranchStats, _first_diff_cmp,
+                               suffix_binary_search)
 
-from .kernel import feature_branch_kernel
+from .kernel import DEFAULT_TILE_B, auto_tile, feature_branch_kernel
 from .ref import feature_branch_ref
 
 
@@ -23,11 +27,18 @@ def _on_tpu() -> bool:
 
 
 def feature_branch(feats, qfeat, knum, pcmp, use_pallas: bool = True,
-                   tile_b: int = 256):
-    """Pad-to-tile wrapper around the kernel (or the jnp oracle)."""
+                   tile_b: int = None, collect_stats: bool = True):
+    """Pad-to-tile wrapper around the kernel (or the jnp oracle).
+
+    ``tile_b=None`` picks the largest power-of-two tile ≤ B (floor 8, cap
+    ``DEFAULT_TILE_B``): a serving-sized batch is not padded to the
+    throughput tile.
+    """
     B = feats.shape[0]
     if not use_pallas:
         return feature_branch_ref(feats, qfeat, knum, pcmp)
+    if tile_b is None:
+        tile_b = auto_tile(B, DEFAULT_TILE_B)
     Bp = -(-B // tile_b) * tile_b
     if Bp != B:
         padw = [(0, Bp - B)] + [(0, 0)] * (feats.ndim - 1)
@@ -36,12 +47,13 @@ def feature_branch(feats, qfeat, knum, pcmp, use_pallas: bool = True,
         knum = jnp.pad(knum, [(0, Bp - B), (0, 0)])
         pcmp = jnp.pad(pcmp, [(0, Bp - B), (0, 0)])
     outs = feature_branch_kernel(feats, qfeat, knum, pcmp, tile_b=tile_b,
-                                 interpret=not _on_tpu())
+                                 interpret=not _on_tpu(),
+                                 collect_stats=collect_stats)
     return tuple(o[:B] for o in outs)
 
 
 def branch_level_pallas(level, key_bytes, key_lens, node_ids, qb, ql,
-                        use_pallas: bool = True):
+                        use_pallas: bool = True, collect_stats: bool = True):
     """Drop-in replacement for core.branch.branch_level using the kernel."""
     B = node_ids.shape[0]
     ns = level.features.shape[-1]
@@ -60,33 +72,27 @@ def branch_level_pallas(level, key_bytes, key_lens, node_ids, qb, ql,
     qfeat = jnp.take_along_axis(qb, jnp.clip(qpos, 0, L - 1), axis=-1)
     qfeat = jnp.where(qpos < L, qfeat, 0).astype(jnp.uint8)
 
-    idx1, resolved, run_lo, run_hi, rounds = feature_branch(
-        feats, qfeat, knum[:, None], pcmp[:, None], use_pallas=use_pallas)
+    outs = feature_branch(feats, qfeat, knum[:, None], pcmp[:, None],
+                          use_pallas=use_pallas, collect_stats=collect_stats)
+    idx1, resolved, run_lo, run_hi = outs[:4]
     idx = idx1[:, 0]
     resolved = resolved[:, 0].astype(bool)
     lo, hi = run_lo[:, 0], run_hi[:, 0]
-    feat_rounds = rounds[:, 0]
+    feat_rounds = outs[4][:, 0] if len(outs) > 4 else None
 
-    # suffix binary search fallback (XLA: data-dependent gathers)
+    # suffix binary search fallback (XLA: data-dependent gathers). The
+    # kernel's `resolved` already folds in the prefix/trivial overrides, so
+    # ~resolved is exactly the billed-fallback lane set of the jnp oracle.
     need_bs = ~resolved
-    lo_b, hi_b = lo, hi + 1
-    anchors = level.anchors[node_ids]
-    key_cmp = jnp.zeros((B,), jnp.int32)
-    for _ in range(max(1, ns.bit_length())):
-        active = lo_b < hi_b
-        mid = jnp.clip((lo_b + hi_b) // 2, 0, ns - 1)
-        aid = jnp.take_along_axis(anchors, mid[:, None], axis=-1)[:, 0]
-        aid_safe = jnp.maximum(aid, 0)
-        c = compare_padded(key_bytes[aid_safe], key_lens[aid_safe], qb, ql)
-        go_right = c <= 0
-        lo_b = jnp.where(active & go_right, mid + 1, lo_b)
-        hi_b = jnp.where(active & ~go_right, mid, hi_b)
-        key_cmp = key_cmp + (active & need_bs).astype(jnp.int32)
+    lo_b, key_cmp = suffix_binary_search(
+        level.anchors, node_ids, key_bytes, key_lens, qb, ql, lo, hi,
+        need_bs, ns, count_compares=collect_stats)
     bs_idx = jnp.clip(lo_b - 1, 0, jnp.maximum(knum - 1, 0))
     idx = jnp.where(need_bs, bs_idx, idx)
 
-    child = jnp.take_along_axis(level.children[node_ids], idx[:, None],
-                                axis=-1)[:, 0]
+    child = level.children[node_ids, idx]
+    if not collect_stats:
+        return child, None
     trivial = knum <= 1
     nz = lambda x: jnp.where(trivial, 0, x).astype(jnp.int32)
     kw_lines = (ql + 63) // 64

@@ -1,0 +1,1 @@
+from .ops import fused_traverse, fused_traverse_probe  # noqa: F401

@@ -5,20 +5,25 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.keys import fnv1a_tags
-from repro.core.leaf import LeafStats
+from repro.core.leaf import LeafStats, verify_candidates
 
-from .kernel import leaf_probe_kernel
-from .ref import leaf_probe_ref
+from .kernel import DEFAULT_TILE_B, leaf_probe_kernel
+from ..feature_branch.kernel import auto_tile
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def leaf_probe(tags, occ, qtag, use_pallas: bool = True, tile_b: int = 512):
+def leaf_probe(tags, occ, qtag, use_pallas: bool = True, tile_b: int = None):
+    """``tile_b=None`` picks the largest power-of-two tile ≤ B (floor 8,
+    cap ``DEFAULT_TILE_B``) so serving-sized batches stay pad-free."""
     B = tags.shape[0]
     if not use_pallas:
+        from .ref import leaf_probe_ref
         return leaf_probe_ref(tags, occ, qtag)
+    if tile_b is None:
+        tile_b = auto_tile(B, DEFAULT_TILE_B)
     Bp = -(-B // tile_b) * tile_b
     if Bp != B:
         tags = jnp.pad(tags, [(0, Bp - B), (0, 0)])
@@ -29,7 +34,8 @@ def leaf_probe(tags, occ, qtag, use_pallas: bool = True, tile_b: int = 512):
     return tuple(o[:B] for o in outs)
 
 
-def probe_pallas(tree, leaf_ids, qb, ql, use_pallas: bool = True):
+def probe_pallas(tree, leaf_ids, qb, ql, use_pallas: bool = True,
+                 collect_stats: bool = True):
     """Drop-in replacement for core.leaf.probe using the kernel for the
     hashtag filter; exact verification gathers only candidate slots."""
     a = tree.arrays
@@ -41,14 +47,11 @@ def probe_pallas(tree, leaf_ids, qb, ql, use_pallas: bool = True):
                                        use_pallas=use_pallas)
     cand = cand_u8 != 0
     kid = a.leaf_keyid[leaf_ids]
-    kid_safe = jnp.maximum(kid, 0)
-    akb = a.key_bytes[kid_safe]
-    akl = a.key_lens[kid_safe]
-    eqfull = (akb == qb[:, None, :]).all(-1) & (akl == ql[:, None]) & cand
-    found = eqfull.any(-1)
-    slot = jnp.argmax(eqfull, axis=-1).astype(jnp.int32)
+    found, slot = verify_candidates(a, cand, kid, qb, ql)
     val = jnp.take_along_axis(a.leaf_val[leaf_ids], slot[:, None], axis=-1)[:, 0]
     val = jnp.where(found, val, 0)
+    if not collect_stats:
+        return found, slot, val, None
     n_cand = count[:, 0]
     kw_lines = (ql + 63) // 64
     stats = LeafStats(

@@ -55,8 +55,9 @@ class Engine:
         self.cache = lm.init_cache(cfg, scfg.max_batch, scfg.s_max)
         self.pos = np.zeros(scfg.max_batch, np.int32)
         self.live: List[Optional[Request]] = [None] * scfg.max_batch
+        # serving is throughput-only: run the tree stats-free (DESIGN.md §3)
         tree_engine = (TraversalEngine(scfg.tree_backend or "jnp",
-                                       scfg.tree_layout)
+                                       scfg.tree_layout, collect_stats=False)
                        if (scfg.tree_backend or scfg.tree_layout) else None)
         self.prefix = PrefixCache(scfg.n_pages, scfg.block_tokens,
                                   engine=tree_engine)

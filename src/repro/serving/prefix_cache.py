@@ -57,7 +57,13 @@ class PrefixCache:
                  engine: Optional[TraversalEngine] = None,
                  compact_factor: float = 4.0):
         self.block_tokens = block_tokens
-        self.engine = engine      # None -> core DEFAULT_ENGINE
+        # serving never reads the modeled hardware counters, so the default
+        # engine runs the stats-free hot path (DESIGN.md §3): leaf ids and
+        # found-ness are bit-identical, the counter machinery compiles to
+        # nothing. An explicit `engine` is honored as-is (pass
+        # collect_stats=True to trace counters through the cache).
+        self.engine = (engine if engine is not None
+                       else TraversalEngine(collect_stats=False))
         self.pool = PagePool(n_pages)
         # auto-compact (device rebuild, DESIGN.md §5) once the tree holds
         # compact_factor× more leaves than a fresh build of the live keys

@@ -1,7 +1,10 @@
 """Engine contract: every (backend, layout) combination is observationally
 identical — same children at every level, same leaf ids, same
 machine-independent BranchStats — on randomized trees drawn from the
-benchmark dataset distributions."""
+benchmark dataset distributions. The matrix includes both backend kinds
+(per-level and the ``fused`` whole-descent kernel) and both stats modes:
+``collect_stats=False`` must return bit-identical leaf ids/paths while
+compiling the counters away (DESIGN.md §3)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -11,11 +14,13 @@ from repro.core import batch_ops as B
 from repro.core import keys as K
 from repro.core.fbtree import TreeConfig, bulk_build, stack_levels
 from repro.core.traverse import (DEFAULT_ENGINE, TraversalEngine,
-                                 available_backends, get_backend)
+                                 available_backends, backend_kind,
+                                 get_backend, get_descent_backend)
 
 from benchmarks.common import make_dataset
 
-COMBOS = [(b, l) for b in ("jnp", "pallas") for l in ("tuple", "stacked")]
+COMBOS = ([(b, l) for b in ("jnp", "pallas") for l in ("tuple", "stacked")]
+          + [("fused", "stacked")])
 
 STAT_FIELDS = ("feat_rounds", "suffix_bs", "key_compares", "sibling_hops")
 
@@ -130,8 +135,9 @@ def test_device_built_tree_parity(ds_name, seed):
     qb, ql = jnp.asarray(qb), jnp.asarray(ql)
 
     ref_leaf = None
-    all_combos = [(b, l) for b in ("jnp", "pallas", "binary", "binary+prefix")
-                  for l in ("tuple", "stacked")]
+    all_combos = ([(b, l) for b in ("jnp", "pallas", "binary",
+                                    "binary+prefix")
+                   for l in ("tuple", "stacked")] + [("fused", "stacked")])
     for backend, layout in all_combos:
         eng = TraversalEngine(backend, layout)
         h_leaf, h_path, h_stats = eng.traverse(th, qb, ql)
@@ -185,10 +191,76 @@ def test_rebuild_preserves_engine_parity():
             (backend, layout)
 
 
+@settings(deadline=None, max_examples=6,
+          suppress_health_check=list(HealthCheck))
+@given(st.sampled_from(("rand-int", "ycsb", "url")),
+       st.integers(0, 2**31 - 1))
+def test_stats_free_path_bit_identical(ds_name, seed):
+    """collect_stats=False is observationally identical on leaf ids and
+    per-level paths for EVERY engine — level and descent backends alike —
+    and returns all-zero counters (the stats machinery compiles away,
+    DESIGN.md §3)."""
+    tree, ks = _build(ds_name, 500, seed % 1000)
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, ks.n, size=160)
+    qb = ks.bytes[idx].copy()
+    ql = ks.lens[idx].copy()
+    flip = rng.random(160) < 0.3
+    qb[flip, -1] ^= 0xA5
+    qb, ql = jnp.asarray(qb), jnp.asarray(ql)
+
+    all_combos = COMBOS + [("binary", "tuple"), ("binary+prefix", "stacked")]
+    for backend, layout in all_combos:
+        on = TraversalEngine(backend, layout, collect_stats=True)
+        off = TraversalEngine(backend, layout, collect_stats=False)
+        leaf_on, path_on, _ = on.traverse(tree, qb, ql)
+        leaf_off, path_off, stats_off = off.traverse(tree, qb, ql)
+        assert (np.asarray(leaf_off) == np.asarray(leaf_on)).all(), \
+            (backend, layout, "leaf ids")
+        for lvl, (p, rp) in enumerate(zip(path_off, path_on)):
+            assert (np.asarray(p) == np.asarray(rp)).all(), \
+                (backend, layout, "path at level", lvl)
+        for f in stats_off._fields:
+            assert (np.asarray(getattr(stats_off, f)) == 0).all(), \
+                (backend, layout, f)
+
+
+def test_stats_free_lookup_matches():
+    """The full op pipeline (descend + probe, fused or not) returns the
+    same values/found under a stats-free engine; counters are zero."""
+    tree, ks = _build("ycsb", 500, 3)
+    qb = jnp.asarray(ks.bytes[:128])
+    ql = jnp.asarray(ks.lens[:128])
+    v_ref, r_ref = B.lookup_batch(tree, qb, ql,
+                                  engine=TraversalEngine("jnp", "tuple"))
+    for backend, layout in COMBOS:
+        eng = TraversalEngine(backend, layout, collect_stats=False)
+        v, r = B.lookup_batch(tree, qb, ql, engine=eng)
+        assert (np.asarray(v) == np.asarray(v_ref)).all(), (backend, layout)
+        assert (np.asarray(r.found) == np.asarray(r_ref.found)).all()
+        for f in ("feat_rounds", "suffix_bs", "key_compares",
+                  "lines_touched", "tag_candidates"):
+            assert (np.asarray(getattr(r, f)) == 0).all(), (backend, layout, f)
+
+
 def test_backend_registry():
     for name in ("jnp", "pallas", "binary", "binary+prefix"):
         assert name in available_backends()
+        assert backend_kind(name) == "level"
         assert callable(get_backend(name))
+    assert "fused" in available_backends()
+    assert backend_kind("fused") == "descent"
+    d = get_descent_backend("fused")
+    assert callable(d.traverse) and callable(d.traverse_probe)
     with pytest.raises(KeyError):
         get_backend("no-such-backend")
+    with pytest.raises(KeyError):
+        get_descent_backend("no-such-backend")
+    with pytest.raises(ValueError):
+        TraversalEngine(backend="no-such-backend")
     assert DEFAULT_ENGINE.backend == "jnp"
+    assert DEFAULT_ENGINE.collect_stats
+    # descent engines expose the fused traverse+probe hook; level engines
+    # don't (batch_ops collapses to one launch only for the former)
+    assert TraversalEngine("fused").probe_path() is not None
+    assert TraversalEngine("jnp").probe_path() is None
