@@ -5,16 +5,17 @@
 
 ``--suite`` is an alias for ``--only``. ``--backend``/``--layout`` apply
 to the engine-selecting suites (ycsb, factor); the traverse suite always
-A/Bs every backend×layout×stats combination. ``--smoke`` is the CI guard:
-tiny trees, one timing pass, all traversal backends (incl. the fused
-descent kernel in interpret mode) parity-checked — and
-``BENCH_traverse.json`` is left untouched so CI runs never overwrite the
-perf trajectory anchor.
+A/Bs every backend×layout×stats combination and the scan suite A/Bs both
+scan backends (jnp reference vs the fused scan kernel) on ordered and
+dirtied leaves. ``--smoke`` is the CI guard: tiny trees, one timing pass,
+all traversal backends (incl. the fused descent and fused scan kernels in
+interpret mode) parity-checked — and ``BENCH_traverse.json`` is left
+untouched so CI runs never overwrite the perf trajectory anchor.
 
 The ``traverse`` suite writes ``BENCH_traverse.json`` at the repo root;
-the ``build`` suite benchmarks host vs device ``bulk_build``
-(+ ``rebuild``) and merges its rows into the same file. Writes CSVs under
-out/bench/ and prints each table.
+the ``build`` suite (host vs device ``bulk_build`` + ``rebuild``) and the
+``scan`` suite (``scan_rows``) merge their rows into the same file.
+Writes CSVs under out/bench/ and prints each table.
 """
 from __future__ import annotations
 
@@ -70,8 +71,10 @@ SUITES = {
                  lambda fast: hardware_counters.run(
                      n_keys=10_000 if fast else 50_000),
                  hardware_counters.COLUMNS),
-    "scan": ("Fig.17(E) — range scan",
-             lambda fast: scan.run(n_keys=8_000 if fast else 20_000),
+    "scan": ("Fig.17(E) — range scan engine A/B (jnp vs fused × "
+             "ordered/dirty)",
+             lambda fast, **kw: scan.run(n_keys=8_000 if fast else 20_000,
+                                         **kw),
              scan.COLUMNS),
     "roofline": ("§Roofline — dry-run derived table",
                  lambda fast: roofline_table.run(),
@@ -106,7 +109,7 @@ def main(argv=None):
         title, fn, cols = SUITES[name]
         eng = (dict(backend=args.backend, layout=args.layout)
                if name in _ENGINE_SUITES else {})
-        if args.smoke and name == "traverse":
+        if args.smoke and name in ("traverse", "scan"):
             eng["smoke"] = True
         t0 = time.time()
         try:
@@ -133,6 +136,9 @@ def main(argv=None):
         elif name == "build":
             print("build rows written to",
                   traverse_bench.write_json(build_rows=rows))
+        elif name == "scan":
+            print("scan rows written to",
+                  traverse_bench.write_json(scan_rows=rows))
     print("\nCSV written to", args.out)
     if failed:
         raise SystemExit(f"suites failed: {', '.join(failed)}")

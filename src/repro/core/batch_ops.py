@@ -621,54 +621,156 @@ def insert_batch(tree: FBTree, qb, ql, vals, max_ov: int = 128,
 # range scan
 # --------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("max_items", "engine"))
-def range_scan(tree: FBTree, qb, ql, max_items: int = 64,
-               engine: Optional[TraversalEngine] = None):
-    """Batched range scan: for each start key return up to ``max_items``
-    (key_id, value) pairs in ascending key order (lazy rearrangement: unsorted
-    leaves are sorted on the fly, modeling §4.5)."""
+def _range_scan_jnp(tree: FBTree, qb, ql, max_items: int,
+                    eng: TraversalEngine, force_sort: bool = False):
+    """jnp chain-walk reference for the range scan (DESIGN.md §6).
+
+    One engine descent to the start leaf, then an early-exit
+    ``lax.while_loop`` over the sibling chain: lanes retire as they reach
+    ``max_items`` or chain end, so short chains stop immediately and
+    tombstone-drained chains are walked to completion (the old fixed
+    ``ceil(max_items / (leaf_fill // 2)) + 1`` hop bound both over-walked
+    and under-filled).
+
+    Lazy rearrangement (§4.5): each hop sorts via ``rowwise_lex_argsort``
+    only under a ``lax.cond`` that fires when some *active* lane sits on a
+    leaf with its ``leaf_ordered`` bit clear — when every visited leaf is
+    ordered, emission is a plain occupancy cumsum in slot order (ordered
+    leaves store keys ascending) and, past hop 0, no key bytes are gathered
+    at all. Hop 0 is peeled: it is the only hop that needs key bytes
+    unconditionally (the start-key compare), and the only hop that filters
+    ``key >= query``; hop ≥ 1 leaves emit every occupied slot (the chain
+    ascends).
+
+    ``rearranged`` counts the dirty leaves each lane actually visited (the
+    leaves a pointer-stable implementation would rearrange); with the
+    engine's static ``collect_stats`` off the counter is never traced and
+    comes back all-zero. ``force_sort=True`` (static) disables the ordered
+    fast path — the always-sort baseline ``benchmarks/scan.py`` A/Bs
+    against; outputs are bit-identical either way.
+    """
     a = tree.arrays
-    cfg = tree.config
-    ns = cfg.ns
+    ns = tree.config.ns
     B = qb.shape[0]
-    leaf_ids, _, bstats = resolve_engine(engine).traverse(tree, qb, ql)
-    hops = -(-max_items // max(1, cfg.leaf_fill // 2)) + 1
+    dump = a.leaf_occ.shape[0] - 1
+    cs = eng.collect_stats
+    leaf_ids, _, _ = eng.traverse(tree, qb, ql)
+    bidx = jnp.broadcast_to(jnp.arange(B)[:, None], (B, ns))
 
     # one scratch column at index max_items for masked scatter dumps
     out_kid = jnp.full((B, max_items + 1), EMPTY, jnp.int32)
     out_val = jnp.zeros((B, max_items + 1), a.leaf_val.dtype)
     emitted = jnp.zeros((B,), jnp.int32)
+
+    def emit_to(out_kid, out_val, emitted, kid, val, emit):
+        rank = jnp.cumsum(emit.astype(jnp.int32), axis=-1) - 1
+        dstpos = emitted[:, None] + rank
+        ok = emit & (dstpos < max_items) & (dstpos >= 0)
+        dp = jnp.where(ok, dstpos, max_items)     # dump to scratch column
+        out_kid = out_kid.at[bidx, dp].set(
+            jnp.where(ok, kid, out_kid[bidx, dp]))
+        out_val = out_val.at[bidx, dp].set(
+            jnp.where(ok, val, out_val[bidx, dp]))
+        emitted = jnp.minimum(emitted + emit.sum(-1), max_items)
+        return out_kid, out_val, emitted
+
+    # ---- hop 0 (peeled): start-key compare — key bytes gathered here and,
+    # on later hops, only inside the dirty-leaf sort branch
     cur = leaf_ids
-    rearranged = jnp.zeros((B,), jnp.int32)
-    bidx = jnp.broadcast_to(jnp.arange(B)[:, None], (B, ns))
-    for h in range(hops):
-        kid = a.leaf_keyid[cur]                     # [B, ns]
-        val = a.leaf_val[cur]
-        occ = a.leaf_occ[cur]
-        kb = a.key_bytes[jnp.maximum(kid, 0)]       # [B, ns, L]
-        kl = jnp.where(occ, a.key_lens[jnp.maximum(kid, 0)], 0)
+    kid = a.leaf_keyid[cur]                       # [B, ns]
+    val = a.leaf_val[cur]
+    occ = a.leaf_occ[cur]
+    kb = a.key_bytes[jnp.maximum(kid, 0)]         # [B, ns, L]
+    kl = jnp.where(occ, a.key_lens[jnp.maximum(kid, 0)], 0)
+    dirty = ~a.leaf_ordered[cur]
+
+    def _as_is(ops):
+        return ops
+
+    def _sorted0(ops):
+        kid, val, occ, kb, kl = ops
         perm = rowwise_lex_argsort(kb, kl, occ)
         g = lambda x: jnp.take_along_axis(x, perm, axis=-1)
-        kid, val, occ = g(kid), g(val), g(occ)
-        kb = jnp.take_along_axis(kb, perm[:, :, None], axis=1)
-        kl = g(kl)
-        if h == 0:
-            cmp = compare_padded(kb, kl, qb[:, None, :], ql[:, None])
-            emit = occ & (cmp >= 0)
-            rearranged = rearranged + (~a.leaf_ordered[cur]).astype(jnp.int32)
+        return (g(kid), g(val), g(occ),
+                jnp.take_along_axis(kb, perm[:, :, None], axis=1), g(kl))
+
+    pred = jnp.zeros((), bool) if force_sort else ~dirty.any()
+    kid, val, occ, kb, kl = jax.lax.cond(pred, _as_is, _sorted0,
+                                         (kid, val, occ, kb, kl))
+    emit = occ & (compare_padded(kb, kl, qb[:, None, :], ql[:, None]) >= 0)
+    out_kid, out_val, emitted = emit_to(out_kid, out_val, emitted,
+                                        kid, val, emit)
+    nxt = a.leaf_next[cur]
+    cur = jnp.where((nxt >= 0) & (emitted < max_items), nxt, dump)
+
+    # ---- hops 1+: early-exit chain walk (every key of an active leaf
+    # emits — the ascending chain guarantees key >= query past hop 0)
+    def w_cond(c):
+        return (c[0] != dump).any()
+
+    def w_body(c):
+        if cs:
+            cur, emitted, out_kid, out_val, rearr = c
         else:
-            emit = occ
-        rank_emit = jnp.cumsum(emit.astype(jnp.int32), axis=-1) - 1
-        dstpos = emitted[:, None] + rank_emit
-        ok = emit & (dstpos < max_items) & (dstpos >= 0)
-        dp = jnp.where(ok, dstpos, max_items)       # dump to scratch column
-        out_kid = out_kid.at[bidx, dp].set(jnp.where(ok, kid, out_kid[bidx, dp]))
-        out_val = out_val.at[bidx, dp].set(jnp.where(ok, val, out_val[bidx, dp]))
-        emitted = jnp.minimum(emitted + emit.sum(-1), max_items)
+            cur, emitted, out_kid, out_val = c
+        active = cur != dump
+        kid = a.leaf_keyid[cur]
+        val = a.leaf_val[cur]
+        occ = a.leaf_occ[cur] & active[:, None]
+        dirty = active & ~a.leaf_ordered[cur]
+
+        def _sortedh(ops):
+            kid, val, occ = ops
+            kb = a.key_bytes[jnp.maximum(kid, 0)]
+            kl = jnp.where(occ, a.key_lens[jnp.maximum(kid, 0)], 0)
+            perm = rowwise_lex_argsort(kb, kl, occ)
+            g = lambda x: jnp.take_along_axis(x, perm, axis=-1)
+            return g(kid), g(val), g(occ)
+
+        pred = jnp.zeros((), bool) if force_sort else ~dirty.any()
+        kid, val, occ = jax.lax.cond(pred, _as_is, _sortedh, (kid, val, occ))
+        out_kid2, out_val2, emitted2 = emit_to(out_kid, out_val, emitted,
+                                               kid, val, occ)
         nxt = a.leaf_next[cur]
-        cur = jnp.where((nxt >= 0) & (emitted < max_items), nxt,
-                        a.leaf_occ.shape[0] - 1)
+        cur = jnp.where(active & (nxt >= 0) & (emitted2 < max_items),
+                        nxt, dump)
+        if cs:
+            return cur, emitted2, out_kid2, out_val2, \
+                rearr + dirty.astype(jnp.int32)
+        return cur, emitted2, out_kid2, out_val2
+
+    carry = (cur, emitted, out_kid, out_val)
+    if cs:
+        carry = carry + (dirty.astype(jnp.int32),)
+    final = jax.lax.while_loop(w_cond, w_body, carry)
+    _, emitted, out_kid, out_val = final[:4]
+    rearranged = final[4] if cs else jnp.zeros((B,), jnp.int32)
     return out_kid[:, :max_items], out_val[:, :max_items], emitted, rearranged
+
+
+@functools.partial(jax.jit, static_argnames=("max_items", "engine"))
+def range_scan(tree: FBTree, qb, ql, max_items: int = 64,
+               engine: Optional[TraversalEngine] = None):
+    """Batched range scan: for each start key return up to ``max_items``
+    ``(key_id, value)`` pairs in ascending key order, starting at the first
+    key >= the query (lazy rearrangement: unsorted leaves are sorted on the
+    fly, modeling §4.5; ordered leaves skip the sort entirely).
+
+    Dispatches through the engine's scan backend (DESIGN.md §6): a backend
+    with a registered whole-scan kernel (``"fused"`` →
+    ``kernels/fused_scan``) collapses descent + sibling hop + chain walk
+    into one launch; every other backend runs the jnp chain-walk reference
+    (:func:`_range_scan_jnp`), descending through the engine as usual.
+    Returns ``(out_kid [B, max_items], out_val [B, max_items], emitted [B],
+    rearranged [B])``; ``rearranged`` (dirty leaves visited) is all-zero
+    under a stats-free engine.
+    """
+    eng = resolve_engine(engine)
+    fused = eng.scan_path()
+    if fused is not None:
+        return fused(tree, qb, ql, max_items=max_items,
+                     collect_stats=eng.collect_stats)
+    return _range_scan_jnp(tree, qb, ql, max_items, eng)
 
 
 # --------------------------------------------------------------------------

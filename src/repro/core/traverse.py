@@ -31,6 +31,16 @@ root-to-leaf descent. Two backend kinds live in two registries
   into one launch. Descent backends always consume ``arrays.stacked``, so
   the engine's ``layout`` field is ignored for them.
 
+A third registry holds **scan backends** (DESIGN.md §6): whole-range-scan
+kernels ``fn(tree, qb, ql, max_items=..., collect_stats=...)
+-> (out_kid, out_val, emitted, rearranged)`` that own descent, sibling hop,
+and the leaf-chain walk in one launch. ``core.batch_ops.range_scan``
+dispatches through :meth:`TraversalEngine.scan_path`: engines whose backend
+registers a scan entry (built-in: ``"fused"`` → ``kernels.fused_scan``)
+collapse the scan into that kernel; every other backend falls back to the
+jnp chain-walk reference in ``batch_ops`` (which still descends through the
+engine's own backend).
+
 ``TraversalEngine`` is a frozen (hashable) dataclass so it can ride along
 as a static jit argument; one engine value == one compiled specialization.
 Its static ``collect_stats`` flag is threaded into every backend: with it
@@ -51,10 +61,10 @@ from .branch import BranchStats, branch_level, to_sibling
 from .fbtree import FBTree, Level
 
 __all__ = [
-    "TraversalEngine", "DEFAULT_ENGINE", "DescentBackend",
+    "TraversalEngine", "DEFAULT_ENGINE", "DescentBackend", "ScanBackend",
     "register_backend", "get_backend", "register_descent_backend",
-    "get_descent_backend", "available_backends", "backend_kind",
-    "resolve_engine",
+    "get_descent_backend", "register_scan_backend", "get_scan_backend",
+    "available_backends", "backend_kind", "resolve_engine",
 ]
 
 # fn(level, key_bytes, key_lens, node_ids, qb, ql, collect_stats=...)
@@ -81,6 +91,17 @@ class DescentBackend(NamedTuple):
 
 _DESCENT: Dict[str, DescentBackend] = {}
 _LAZY_DESCENT: Dict[str, Callable[[], DescentBackend]] = {}
+
+# fn(tree, qb, ql, max_items=..., collect_stats=...)
+#   -> (out_kid [B, max_items], out_val [B, max_items], emitted [B],
+#       rearranged [B]) — the ``core.batch_ops.range_scan`` contract
+# (DESIGN.md §6). ``rearranged`` must be all-zero (and untraced) when
+# ``collect_stats`` is off.
+ScanBackend = Callable[..., Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                                  jnp.ndarray]]
+
+_SCAN: Dict[str, ScanBackend] = {}
+_LAZY_SCAN: Dict[str, Callable[[], ScanBackend]] = {}
 
 
 def register_backend(name: str, fn: BackendFn = None, *,
@@ -109,6 +130,21 @@ def register_descent_backend(name: str, backend: DescentBackend = None, *,
         _LAZY_DESCENT[name] = loader
 
 
+def register_scan_backend(name: str, fn: ScanBackend = None, *,
+                          loader: Callable[[], ScanBackend] = None) -> None:
+    """Register a whole-scan backend (same eager/lazy split as
+    :func:`register_backend`). A scan backend rides under the same name as
+    the level/descent backend it pairs with (e.g. ``"fused"`` registers
+    both a descent and a scan entry); ``range_scan`` dispatches to it via
+    :meth:`TraversalEngine.scan_path` (DESIGN.md §6)."""
+    assert (fn is None) != (loader is None), "pass exactly one of fn/loader"
+    if fn is not None:
+        _SCAN[name] = fn
+        _LAZY_SCAN.pop(name, None)
+    else:
+        _LAZY_SCAN[name] = loader
+
+
 def get_backend(name: str) -> BackendFn:
     if name not in _BACKENDS:
         if name not in _LAZY_BACKENDS:
@@ -129,17 +165,32 @@ def get_descent_backend(name: str) -> DescentBackend:
     return _DESCENT[name]
 
 
+def get_scan_backend(name: str) -> ScanBackend:
+    if name not in _SCAN:
+        if name not in _LAZY_SCAN:
+            raise KeyError(
+                f"unknown scan backend {name!r}; "
+                f"available: {available_backends()}")
+        _SCAN[name] = _LAZY_SCAN.pop(name)()
+    return _SCAN[name]
+
+
 def available_backends() -> List[str]:
     return sorted(set(_BACKENDS) | set(_LAZY_BACKENDS)
-                  | set(_DESCENT) | set(_LAZY_DESCENT))
+                  | set(_DESCENT) | set(_LAZY_DESCENT)
+                  | set(_SCAN) | set(_LAZY_SCAN))
 
 
 def backend_kind(name: str) -> str:
-    """``"level"`` or ``"descent"`` (KeyError if unregistered)."""
+    """``"level"``, ``"descent"``, or ``"scan"`` for a scan-only name
+    (KeyError if unregistered). Names registered in several registries
+    report the kind that drives point-op descent: descent > level."""
     if name in _DESCENT or name in _LAZY_DESCENT:
         return "descent"
     if name in _BACKENDS or name in _LAZY_BACKENDS:
         return "level"
+    if name in _SCAN or name in _LAZY_SCAN:
+        return "scan"
     raise KeyError(f"unknown traversal backend {name!r}; "
                    f"available: {available_backends()}")
 
@@ -160,12 +211,18 @@ def _load_fused_backend() -> DescentBackend:
     return DescentBackend(fused_traverse, fused_traverse_probe)
 
 
+def _load_fused_scan_backend() -> ScanBackend:
+    from repro.kernels.fused_scan.ops import fused_range_scan
+    return fused_range_scan
+
+
 register_backend("jnp", branch_level)
 register_backend("pallas", loader=_load_pallas_backend)
 register_backend("binary", loader=functools.partial(_load_binary_backend, False))
 register_backend("binary+prefix",
                  loader=functools.partial(_load_binary_backend, True))
 register_descent_backend("fused", loader=_load_fused_backend)
+register_scan_backend("fused", loader=_load_fused_scan_backend)
 
 LAYOUTS = ("tuple", "stacked")
 
@@ -206,6 +263,15 @@ class TraversalEngine:
         if self.kind != "descent":
             return None
         return get_descent_backend(self.backend).traverse_probe
+
+    def scan_path(self) -> Optional[ScanBackend]:
+        """Whole-scan kernel entry of this engine's backend, or None —
+        ``core.batch_ops.range_scan`` collapses the scan to one launch when
+        present, and otherwise runs the jnp chain-walk reference (which
+        still descends through this engine's backend). DESIGN.md §6."""
+        if self.backend in _SCAN or self.backend in _LAZY_SCAN:
+            return get_scan_backend(self.backend)
+        return None
 
     def traverse(self, tree: FBTree, qb: jnp.ndarray, ql: jnp.ndarray,
                  sibling_check: bool = True,

@@ -88,39 +88,20 @@ def _prefix_cmp(qb, prefix, plen):
     return jnp.where(anynz, jnp.sign(first), 0)
 
 
-def _kernel(*refs, n_levels: int, fs: int, ns: int, L: int,
-            sibling_check: bool, with_probe: bool, collect_stats: bool):
-    it = iter(refs)
-    qb = next(it)[...]                        # [TB, L] u8
-    ql = next(it)[...]                        # [TB, 1] i32
-    qtag = next(it)[...] if with_probe else None   # [TB, 1] u8
-    knum_a = next(it)[...]                    # [n_levels, C]
-    plen_a = next(it)[...]
-    prefix_a = next(it)[...]                  # [n_levels, C, L]
-    feats_a = next(it)[...]                   # [n_levels, C, fs, ns]
-    child_a = next(it)[...]                   # [n_levels, C, ns]
-    anch_a = next(it)[...]
-    key_bytes = next(it)[...]                 # [KC, L] u8
-    key_lens = next(it)[...][:, 0]            # [KC]
-    if sibling_check:
-        leaf_high = next(it)[...][:, 0]       # [LC]
-        leaf_next = next(it)[...][:, 0]
-    if with_probe:
-        leaf_tags = next(it)[...]             # [LC, ns] u8
-        leaf_occ = next(it)[...]              # [LC, ns] u8
-        leaf_keyid = next(it)[...]            # [LC, ns] i32
-        leaf_val = next(it)[...]              # [LC, ns]
-    leaf_ref = next(it)
-    path_ref = next(it)
-    if with_probe:
-        found_ref, slot_ref, val_ref = next(it), next(it), next(it)
-    if collect_stats:
-        fr_ref, sb_ref, kc_ref, li_ref, sh_ref = (
-            next(it), next(it), next(it), next(it), next(it))
-        tc_ref = next(it) if with_probe else None
+def descend_levels(qb, ql, knum_a, plen_a, prefix_a, feats_a, child_a,
+                   anch_a, key_bytes, key_lens, *, n_levels: int, fs: int,
+                   ns: int, L: int, collect_stats: bool):
+    """The in-kernel root→leaf descent over the stacked level arrays.
 
+    SHARED between the fused descent kernel below and the fused range-scan
+    kernel (``kernels/fused_scan``) — the parity contract (DESIGN.md §3)
+    requires both to resolve bit-identical leaves, so there is exactly one
+    definition of the level loop. Returns ``(nid, path_cols, stat_accs)``
+    where ``stat_accs = (fr_acc, sb_acc, kc_acc, li_acc)`` (all-zero
+    ``[TB, 1]`` columns when ``collect_stats`` is off — the accumulator
+    arithmetic is never traced then).
+    """
     TB = qb.shape[0]
-    lane = _iota((TB, ns), 1)
     lines_per_row = max(1, ns // 64)
     kw_lines = (ql + 63) // 64                # [TB, 1]
     z = jnp.zeros((TB, 1), jnp.int32)
@@ -129,7 +110,6 @@ def _kernel(*refs, n_levels: int, fs: int, ns: int, L: int,
     nid = jnp.zeros((TB,), jnp.int32)         # root = node 0 of level 0
     path_cols = []
 
-    # ---------------- descent: all inner levels, resident in-kernel --------
     for l in range(n_levels):
         path_cols.append(nid)
         kn = jnp.take(knum_a[l], nid)[:, None]            # [TB, 1]
@@ -192,20 +172,73 @@ def _kernel(*refs, n_levels: int, fs: int, ns: int, L: int,
             li_acc = li_acc + nz_(1 + fr * lines_per_row
                                   + kc * (1 + kw_lines) + 1)
 
+    return nid, path_cols, (fr_acc, sb_acc, kc_acc, li_acc)
+
+
+def sibling_hop(nid, qb, ql, key_bytes, key_lens, leaf_high, leaf_next):
+    """Blink-style sibling-hop epilogue (§4.3), ``N_HOPS``-bounded — shared
+    with the fused range-scan kernel. Returns ``(nid, hops [TB, 1])``."""
+    hops = jnp.zeros((qb.shape[0], 1), jnp.int32)
+    for _ in range(N_HOPS):
+        hk = jnp.take(leaf_high, nid)[:, None]              # [TB, 1]
+        nxt = jnp.take(leaf_next, nid)[:, None]
+        has_hk = hk >= 0
+        hk_safe = jnp.maximum(hk[:, 0], 0)
+        hkb = jnp.take(key_bytes, hk_safe, axis=0)
+        hkl = jnp.take(key_lens, hk_safe)[:, None]
+        c3 = _cmp3(qb, ql, hkb, hkl)                        # query vs high key
+        must = has_hk & (c3 >= 0) & (nxt >= 0)
+        nid = jnp.where(must[:, 0], nxt[:, 0], nid)
+        hops = hops + must.astype(jnp.int32)
+    return nid, hops
+
+
+def _kernel(*refs, n_levels: int, fs: int, ns: int, L: int,
+            sibling_check: bool, with_probe: bool, collect_stats: bool):
+    it = iter(refs)
+    qb = next(it)[...]                        # [TB, L] u8
+    ql = next(it)[...]                        # [TB, 1] i32
+    qtag = next(it)[...] if with_probe else None   # [TB, 1] u8
+    knum_a = next(it)[...]                    # [n_levels, C]
+    plen_a = next(it)[...]
+    prefix_a = next(it)[...]                  # [n_levels, C, L]
+    feats_a = next(it)[...]                   # [n_levels, C, fs, ns]
+    child_a = next(it)[...]                   # [n_levels, C, ns]
+    anch_a = next(it)[...]
+    key_bytes = next(it)[...]                 # [KC, L] u8
+    key_lens = next(it)[...][:, 0]            # [KC]
+    if sibling_check:
+        leaf_high = next(it)[...][:, 0]       # [LC]
+        leaf_next = next(it)[...][:, 0]
+    if with_probe:
+        leaf_tags = next(it)[...]             # [LC, ns] u8
+        leaf_occ = next(it)[...]              # [LC, ns] u8
+        leaf_keyid = next(it)[...]            # [LC, ns] i32
+        leaf_val = next(it)[...]              # [LC, ns]
+    leaf_ref = next(it)
+    path_ref = next(it)
+    if with_probe:
+        found_ref, slot_ref, val_ref = next(it), next(it), next(it)
+    if collect_stats:
+        fr_ref, sb_ref, kc_ref, li_ref, sh_ref = (
+            next(it), next(it), next(it), next(it), next(it))
+        tc_ref = next(it) if with_probe else None
+
+    TB = qb.shape[0]
+    lane = _iota((TB, ns), 1)
+    z = jnp.zeros((TB, 1), jnp.int32)
+
+    # ---------------- descent: all inner levels, resident in-kernel --------
+    nid, path_cols, (fr_acc, sb_acc, kc_acc, li_acc) = descend_levels(
+        qb, ql, knum_a, plen_a, prefix_a, feats_a, child_a, anch_a,
+        key_bytes, key_lens, n_levels=n_levels, fs=fs, ns=ns, L=L,
+        collect_stats=collect_stats)
+
     # ---------------- epilogue: blink-style sibling hop (§4.3) ------------
     hops = z
     if sibling_check:
-        for _ in range(N_HOPS):
-            hk = jnp.take(leaf_high, nid)[:, None]          # [TB, 1]
-            nxt = jnp.take(leaf_next, nid)[:, None]
-            has_hk = hk >= 0
-            hk_safe = jnp.maximum(hk[:, 0], 0)
-            hkb = jnp.take(key_bytes, hk_safe, axis=0)
-            hkl = jnp.take(key_lens, hk_safe)[:, None]
-            c3 = _cmp3(qb, ql, hkb, hkl)                    # query vs high key
-            must = has_hk & (c3 >= 0) & (nxt >= 0)
-            nid = jnp.where(must[:, 0], nxt[:, 0], nid)
-            hops = hops + must.astype(jnp.int32)
+        nid, hops = sibling_hop(nid, qb, ql, key_bytes, key_lens,
+                                leaf_high, leaf_next)
 
     leaf_ref[...] = nid[:, None]
     path_ref[...] = jnp.stack(path_cols, axis=-1)           # [TB, n_levels]

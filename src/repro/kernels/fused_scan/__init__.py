@@ -1,0 +1,1 @@
+from .ops import fused_range_scan  # noqa: F401

@@ -1,0 +1,16 @@
+"""jnp oracle for the fused range scan: the chain-walk reference lives in
+``core.batch_ops._range_scan_jnp`` (single definition — it IS the fallback
+path ``range_scan`` runs for every non-kernel backend). This thin wrapper
+pins it to the ``jnp`` descent so kernel-level tests can compare the kernel
+against a fixed reference configuration regardless of which engine the
+caller would select (``tests/test_scan.py::test_scan_registry``).
+"""
+from __future__ import annotations
+
+
+def fused_range_scan_ref(tree, qb, ql, max_items: int = 64,
+                         collect_stats: bool = True):
+    from repro.core.batch_ops import _range_scan_jnp
+    from repro.core.traverse import TraversalEngine
+    eng = TraversalEngine("jnp", collect_stats=collect_stats)
+    return _range_scan_jnp(tree, qb, ql, max_items, eng)

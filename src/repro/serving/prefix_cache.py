@@ -11,7 +11,11 @@ All cache operations are *batched tree ops* on the FB+-tree core:
   touch            -> update_batch on access stamps (the paper's latch-free
                       update path: value CAS, version untouched, readers
                       never restart)
-  evict sweep      -> range_scan over the digest space
+  evict sweep      -> range_scan over the digest space (scan engine,
+                      DESIGN.md §6: dispatches to the fused scan kernel
+                      when the cache's engine backend registers one, else
+                      the jnp chain walk; leaves the cache keeps ordered
+                      ride the lazy-rearrangement fast path)
   compact          -> rebuild (device-side bulk build, DESIGN.md §5):
                       drops tombstones and split fragmentation online
 This is exactly the paper's skewed workload: shared system prompts ⇒ heavy
@@ -155,7 +159,9 @@ class PrefixCache:
         if victims.size == 0:
             return
         # removing by value requires key lookup; we keep a reverse map built
-        # from a range scan over the digest space (the YCSB-E analogue)
+        # from a range scan over the digest space (the YCSB-E analogue).
+        # self.engine selects the scan route (DESIGN.md §6) and is
+        # stats-free by default, so the rearranged counter costs nothing
         start = K.make_keyset([b"\x00" * KEY_W], KEY_W)
         kid, val, emitted, _ = B.range_scan(
             self.tree, start.bytes, start.lens,
