@@ -26,7 +26,7 @@ import sys
 import time
 
 from . import (contention, factor_analysis, feature_size,
-               hardware_counters, memory, roofline_table, scan,
+               hardware_counters, memory, roofline_table, scan, shard,
                traverse_bench, ycsb)
 from .common import fmt_table
 
@@ -76,6 +76,12 @@ SUITES = {
              lambda fast, **kw: scan.run(n_keys=8_000 if fast else 20_000,
                                          **kw),
              scan.COLUMNS),
+    "shard": ("DESIGN.md §7 — sharded tree: 1 vs 2 vs 4 shards, "
+              "parity-gated",
+              lambda fast, **kw: shard.run(n_keys=8_000 if fast else 20_000,
+                                           n_ops=4_096 if fast else 8_192,
+                                           **kw),
+              shard.COLUMNS),
     "roofline": ("§Roofline — dry-run derived table",
                  lambda fast: roofline_table.run(),
                  roofline_table.COLUMNS),
@@ -109,7 +115,7 @@ def main(argv=None):
         title, fn, cols = SUITES[name]
         eng = (dict(backend=args.backend, layout=args.layout)
                if name in _ENGINE_SUITES else {})
-        if args.smoke and name in ("traverse", "scan"):
+        if args.smoke and name in ("traverse", "scan", "shard"):
             eng["smoke"] = True
         t0 = time.time()
         try:
@@ -139,6 +145,9 @@ def main(argv=None):
         elif name == "scan":
             print("scan rows written to",
                   traverse_bench.write_json(scan_rows=rows))
+        elif name == "shard":
+            print("shard rows written to",
+                  traverse_bench.write_json(shard_rows=rows))
     print("\nCSV written to", args.out)
     if failed:
         raise SystemExit(f"suites failed: {', '.join(failed)}")

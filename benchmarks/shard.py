@@ -1,0 +1,109 @@
+"""Sharded-tree benchmark (DESIGN.md §7): 1 vs 2 vs 4 shards on the three
+anchor datasets.
+
+For each dataset the suite builds one unsharded reference tree and a
+``ShardedTree`` per shard count from the same keys, **parity-gates** every
+configuration (lookup values/found and range-scan emissions must be
+bit-identical to the reference — a routing or merge regression fails the
+suite before any number is reported), then times the two serving-shaped
+ops: batched point lookups (zipf-skewed) and range scans.
+
+Run with a multi-device CPU to see real shard overlap::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python -m benchmarks.run --suite shard
+
+CI runs exactly that via ``--smoke`` (tiny n, parity asserts, one timing
+pass, never writes the anchor). ``n_devices`` rides along in every row so
+anchor rows from 1-device and 4-device hosts aren't conflated: on one
+device the shard loop serializes and smaller per-shard trees are the only
+win; with one device per shard the per-shard launches overlap.
+
+Rows merge into ``BENCH_traverse.json`` under ``shard_rows``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import shard as S
+from repro.core import batch_ops as B
+from repro.core import keys as K
+from repro.core.fbtree import TreeConfig, bulk_build
+from repro.core.traverse import TraversalEngine
+
+from .common import make_dataset, timed, zipf_indices
+
+SHARD_COUNTS = (1, 2, 4)
+
+
+def run(datasets=("rand-int", "ycsb", "url"), n_keys=20_000, n_ops=8_192,
+        n_scans=256, scan_len=64, seed=41, smoke: bool = False
+        ) -> List[Dict]:
+    if smoke:
+        datasets = ("ycsb",)
+        n_keys, n_ops, n_scans, scan_len = 600, 512, 64, 24
+    n_devices = len(jax.devices())
+    rows = []
+    rng = np.random.default_rng(seed)
+    # stats-free engine: the serving configuration (the shard layer
+    # dispatches through the same engine registry as every other call site)
+    eng = TraversalEngine("jnp", collect_stats=False)
+    for ds in datasets:
+        keys, width = make_dataset(ds, n_keys)
+        ks = K.make_keyset(keys, width)
+        vals = np.arange(len(keys), dtype=np.int32)
+        cfg = TreeConfig.plan(max_keys=int(len(keys) * 2.5), key_width=width)
+        ref = bulk_build(cfg, ks, vals)
+
+        idx = zipf_indices(rng, len(keys), n_ops, 0.99)
+        qb, ql = ks.bytes[idx], ks.lens[idx]
+        sidx = rng.integers(0, len(keys), size=n_scans)
+        sqb, sql = ks.bytes[sidx], ks.lens[sidx]
+
+        v_ref, rep_ref = B.lookup_batch(ref, qb[:1024], ql[:1024],
+                                        engine=eng)
+        v_ref = np.asarray(v_ref)
+        f_ref = np.asarray(rep_ref.found)
+        k_ref, sv_ref, em_ref, _ = B.range_scan(ref, sqb, sql,
+                                                max_items=scan_len,
+                                                engine=eng)
+        sv_ref, em_ref = np.asarray(sv_ref), np.asarray(em_ref)
+
+        for n_shards in SHARD_COUNTS:
+            st = S.sharded_build(ks, vals, n_shards, cfg=cfg)
+            # ---- parity gate (before any timing)
+            v_sh, rep_sh = S.lookup_batch(st, qb[:1024], ql[:1024],
+                                          engine=eng)
+            assert (f_ref == rep_sh.found).all(), (ds, n_shards, "found")
+            assert (v_ref == v_sh).all(), (ds, n_shards, "vals")
+            gk, sv_sh, em_sh, _ = S.range_scan(st, sqb, sql,
+                                               max_items=scan_len,
+                                               engine=eng)
+            assert (em_ref == em_sh).all(), (ds, n_shards, "emitted")
+            assert (sv_ref == sv_sh).all(), (ds, n_shards, "scan vals")
+
+            # ---- timing
+            def lookup_fn():
+                return S.lookup_batch(st, qb, ql, engine=eng)[0]
+
+            def scan_fn():
+                return S.range_scan(st, sqb, sql, max_items=scan_len,
+                                    engine=eng)[1]
+            t_lk = timed(lookup_fn, warmup=1, iters=1 if smoke else 5)
+            t_sc = timed(scan_fn, warmup=1, iters=1 if smoke else 5)
+            rows.append({
+                "dataset": ds, "n_keys": len(keys), "n_ops": n_ops,
+                "n_shards": n_shards, "n_devices": n_devices,
+                "lookup_Mops": round(n_ops / t_lk / 1e6, 3),
+                "scan_Mitems": round(n_scans * scan_len / t_sc / 1e6, 3),
+                "parity": "ok",
+            })
+    return rows
+
+
+COLUMNS = ["dataset", "n_keys", "n_ops", "n_shards", "n_devices",
+           "lookup_Mops", "scan_Mitems", "parity"]

@@ -175,11 +175,12 @@ BUILD_COLUMNS = ["dataset", "n_keys", "mode", "build_ms", "Mkeys/s",
 
 
 def write_json(rows: List[Dict] = None, build_rows: List[Dict] = None,
-               scan_rows: List[Dict] = None, path: str = None) -> str:
+               scan_rows: List[Dict] = None, shard_rows: List[Dict] = None,
+               path: str = None) -> str:
     """Merge the given section(s) into ``BENCH_traverse.json`` — the perf
     trajectory anchor accumulates (``rows`` = traversal A/B, ``build_rows``
-    = host-vs-device build, ``scan_rows`` = scan-engine A/B); suites never
-    clobber each other."""
+    = host-vs-device build, ``scan_rows`` = scan-engine A/B, ``shard_rows``
+    = sharded-tree 1/2/4-shard A/B); suites never clobber each other."""
     if path is None:
         path = os.path.join(os.path.dirname(os.path.dirname(__file__)),
                             "BENCH_traverse.json")
@@ -193,6 +194,8 @@ def write_json(rows: List[Dict] = None, build_rows: List[Dict] = None,
         data["build_rows"] = build_rows
     if scan_rows is not None:
         data["scan_rows"] = scan_rows
+    if shard_rows is not None:
+        data["shard_rows"] = shard_rows
     with open(path, "w") as f:
         json.dump(data, f, indent=2)
         f.write("\n")

@@ -62,3 +62,13 @@ for var in ("base", "feature+hash"):
     _, _, st, _ = lookup_variant(tree, qb, ql, variant=var)
     print(f"{var:13s} key_compares/op={float(st.key_compares.mean()):5.2f} "
           f"modeled_lines/op={float(st.lines_touched.mean()):5.1f}")
+
+# ---- shard it (DESIGN.md §7): routed ops, bit-identical results -----------
+from repro import shard as S
+
+st = S.sharded_build(ks, np.arange(len(keys), dtype=np.int32), n_shards=4)
+svals, srep = S.lookup_batch(st, q.bytes, q.lens)
+print("sharded lookup (owner per query:", srep.owner.tolist(), ") ->",
+      list(zip(srep.found.tolist(), svals.tolist())))
+st, rrep = S.rebalance(st)   # skew-recovery barrier: even re-partition
+print("rebalance:", rrep.counts_before, "->", rrep.counts_after)

@@ -10,7 +10,7 @@ import jax.numpy as jnp
 from benchmarks.common import build_tree, make_dataset, zipf_indices
 from repro.core import batch_ops as B
 from repro.core.baseline import lookup_variant
-from repro.serving.prefix_cache import PrefixCache
+from repro.serving import PrefixCache
 
 rng = np.random.default_rng(1)
 

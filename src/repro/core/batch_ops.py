@@ -37,7 +37,7 @@ from .traverse import TraversalEngine, resolve_engine
 __all__ = [
     "OpReport", "BuildReport", "lookup_batch", "update_batch", "insert_batch",
     "remove_batch", "range_scan", "rebuild", "dedupe_last_wins",
-    "traverse_path", "traverse_probe",
+    "traverse_path", "traverse_probe", "gather_live_sorted",
 ]
 
 
@@ -184,15 +184,21 @@ def lookup_batch(tree: FBTree, qb, ql, sibling_check: bool = True,
 
 @functools.partial(jax.jit, static_argnames=("engine",))
 def update_batch(tree: FBTree, qb, ql, vals,
-                 engine: Optional[TraversalEngine] = None):
+                 engine: Optional[TraversalEngine] = None, mask=None):
     """Blind value update for existing keys (latch-free CAS analogue).
 
     Does NOT bump leaf versions (§4.2 — readers never restart on updates).
+    ``mask`` (bool [B], optional) is the routed-op hook (DESIGN.md §7):
+    lanes with ``mask=False`` never write — the shard router passes
+    ``owner == s`` so only a key's owning shard commits it. ``found`` is
+    reported for every lane regardless of mask.
     """
     B = qb.shape[0]
     a = tree.arrays
     dump = a.leaf_occ.shape[0] - 1
     winners, conflicts = dedupe_last_wins(qb, ql, jnp.arange(B, dtype=jnp.int32))
+    if mask is not None:
+        winners = winners & mask
     leaf_ids, _, found, slot, _, bstats, lstats = _traverse_probe(
         tree, qb, ql, engine)
     do = winners & found
@@ -205,12 +211,15 @@ def update_batch(tree: FBTree, qb, ql, vals,
 
 @functools.partial(jax.jit, static_argnames=("engine",))
 def remove_batch(tree: FBTree, qb, ql,
-                 engine: Optional[TraversalEngine] = None):
-    """Tombstone removal (slot cleared, version bumped)."""
+                 engine: Optional[TraversalEngine] = None, mask=None):
+    """Tombstone removal (slot cleared, version bumped). ``mask`` gates
+    writes exactly as in :func:`update_batch` (routed-op hook)."""
     B = qb.shape[0]
     a = tree.arrays
     dump = a.leaf_occ.shape[0] - 1
     winners, conflicts = dedupe_last_wins(qb, ql, jnp.arange(B, dtype=jnp.int32))
+    if mask is not None:
+        winners = winners & mask
     leaf_ids, _, found, slot, _, bstats, lstats = _traverse_probe(
         tree, qb, ql, engine)
     do = winners & found
@@ -229,13 +238,19 @@ def remove_batch(tree: FBTree, qb, ql,
 
 @functools.partial(jax.jit, static_argnames=("engine",))
 def _prepare_insert(tree: FBTree, qb, ql, vals,
-                    engine: Optional[TraversalEngine] = None):
-    """Dedupe, update existing keys in place, append new key bytes to pool."""
+                    engine: Optional[TraversalEngine] = None, mask=None):
+    """Dedupe, update existing keys in place, append new key bytes to pool.
+
+    ``mask`` (routed-op hook): masked-out lanes lose the dedupe outright,
+    so they neither update in place nor append to the pool — the shard
+    layer inserts each key only into its owning shard."""
     B = qb.shape[0]
     a = tree.arrays
     ldump = a.leaf_occ.shape[0] - 1
     kdump = a.key_bytes.shape[0] - 1
     winners, conflicts = dedupe_last_wins(qb, ql, jnp.arange(B, dtype=jnp.int32))
+    if mask is not None:
+        winners = winners & mask
     leaf_ids, _, found, slot, _, bstats, lstats = _traverse_probe(
         tree, qb, ql, engine)
 
@@ -572,13 +587,15 @@ _ROUND_CACHE = {}
 
 def insert_batch(tree: FBTree, qb, ql, vals, max_ov: int = 128,
                  ins_cap: int = None, max_rounds: int = 64,
-                 engine: Optional[TraversalEngine] = None):
+                 engine: Optional[TraversalEngine] = None, mask=None):
     """Batched upsert. Returns (tree', report, rounds).
 
     Orchestrates: dedupe/update/append (one jitted call) + split rounds
     (jitted, bounded work per round) until no ops are pending. ``ins_cap``
     bounds keys absorbed per leaf per round (default 4*ns — monotone-append
-    workloads funnel a whole batch into the rightmost leaf).
+    workloads funnel a whole batch into the rightmost leaf). ``mask``
+    (bool [B], optional) is the routed-op hook: masked-out lanes are
+    no-ops — no in-place update, no pool append, never pending.
     """
     qb = jnp.asarray(qb)
     ql = jnp.asarray(ql)
@@ -596,7 +613,7 @@ def insert_batch(tree: FBTree, qb, ql, vals, max_ov: int = 128,
     round_fn = _ROUND_CACHE[key]
 
     tree, kid_op, pending, rep = _prepare_insert(tree, qb, ql, vals,
-                                                 engine=engine)
+                                                 engine=engine, mask=mask)
     if bool(rep.error):
         raise RuntimeError("insert_batch: key pool capacity exceeded")
     total_splits = jnp.int32(0)
@@ -785,23 +802,16 @@ class BuildReport(NamedTuple):
     error: jnp.ndarray      # bool — capacity exceeded; discard the result
 
 
-@jax.jit
-def rebuild(tree: FBTree) -> Tuple[FBTree, BuildReport]:
-    """Compact a split-fragmented tree by re-running the device bulk build.
+def gather_live_sorted(tree: FBTree):
+    """Gather a tree's live key set into a sorted, compacted, pool-shaped
+    snapshot: ``(kb, kl, ktags, vals, n_live)`` with rows ``[0, n_live)``
+    holding the live keys ascending and zeros everywhere else — exactly the
+    input contract of ``fbtree._device_build_from_sorted``.
 
-    Gathers the live (key id, value) pairs from the leaves, sorts them on
-    device (packed-word lexsort, invalid slots last), re-packs the key pool
-    front-to-back, and reconstructs every level — tuple and stacked layouts
-    alike — through ``fbtree._device_build_from_sorted``. Entirely jnp, so it
-    composes under jit with the other batch ops.
-
-    Semantics w.r.t. the §2 protocol (DESIGN.md §5): a rebuild is a
-    bulk-synchronous barrier. Tombstoned keys are dropped and the pool is
-    compacted, so *key ids are not stable across a rebuild*; leaf versions
-    reset to zero and sibling links are relinked left-to-right. Results
-    cached from before the barrier (leaf ids, key ids, versions) must be
-    re-resolved by a fresh traversal. The output tree is exactly what
-    ``bulk_build`` (host or device) would produce from the live key set.
+    Pure jnp (composes under jit): :func:`rebuild` feeds it straight back
+    into the device build, and the shard layer (DESIGN.md §7) concatenates
+    the per-shard snapshots — already globally sorted, since shards are
+    range-partitioned — to re-partition on ``repro.shard.rebalance``.
     """
     a, cfg = tree.arrays, tree.config
     KC, L = cfg.key_cap, cfg.key_width
@@ -826,6 +836,29 @@ def rebuild(tree: FBTree) -> Tuple[FBTree, BuildReport]:
         jnp.where(valid, a.key_tags[skid], 0))
     vv = jnp.zeros((KC + 1,), a.leaf_val.dtype).at[dst].set(
         jnp.where(valid, jnp.take(a.leaf_val.reshape(-1), order), 0))
+    return kb, kl, ktags, vv, n_live
+
+
+@jax.jit
+def rebuild(tree: FBTree) -> Tuple[FBTree, BuildReport]:
+    """Compact a split-fragmented tree by re-running the device bulk build.
+
+    Gathers the live (key id, value) pairs from the leaves
+    (:func:`gather_live_sorted`: packed-word lexsort, invalid slots last,
+    pool re-packed front-to-back) and reconstructs every level — tuple and
+    stacked layouts alike — through ``fbtree._device_build_from_sorted``.
+    Entirely jnp, so it composes under jit with the other batch ops.
+
+    Semantics w.r.t. the §2 protocol (DESIGN.md §5): a rebuild is a
+    bulk-synchronous barrier. Tombstoned keys are dropped and the pool is
+    compacted, so *key ids are not stable across a rebuild*; leaf versions
+    reset to zero and sibling links are relinked left-to-right. Results
+    cached from before the barrier (leaf ids, key ids, versions) must be
+    re-resolved by a fresh traversal. The output tree is exactly what
+    ``bulk_build`` (host or device) would produce from the live key set.
+    """
+    a, cfg = tree.arrays, tree.config
+    kb, kl, ktags, vv, n_live = gather_live_sorted(tree)
     arrays, err = _device_build_from_sorted(cfg, kb, kl, ktags, vv, n_live)
     rep = BuildReport(n_live=n_live, n_leaves=arrays.leaf_count,
                       reclaimed=(a.key_count - n_live).astype(jnp.int32),

@@ -42,7 +42,7 @@ from . import keys as K
 
 __all__ = ["TreeConfig", "Level", "FBTree", "bulk_build", "tree_to_device",
            "stack_levels", "chunk_start", "chunk_of_pos",
-           "recompute_inner_meta"]
+           "recompute_inner_meta", "sharded_partition"]
 
 EMPTY = np.int32(-1)
 BIG = jnp.int32(2**30)
@@ -626,3 +626,57 @@ def _bulk_build_device(cfg: TreeConfig, ks: K.KeySet, vals) -> FBTree:
 
 def tree_to_device(tree: FBTree) -> FBTree:
     return jax.tree_util.tree_map(jnp.asarray, tree)
+
+
+# --------------------------------------------------------------------------
+# shard-aware build entry (DESIGN.md §7)
+# --------------------------------------------------------------------------
+
+def sharded_partition(ks: K.KeySet, vals, n_shards: int,
+                      presorted: bool = False):
+    """Range-partition a key set for a sharded build: the §5 pipeline's
+    step 1 (the global sort) going distributed, with steps 2–3 unchanged
+    per shard.
+
+    One global lexicographic sort (``keys.lex_sort_indices`` — the same
+    order every build path uses), then a balanced contiguous split into
+    ``n_shards`` runs. ``presorted=True`` skips the sort for inputs already
+    in that exact order (e.g. ``repro.shard.rebalance``'s concatenation of
+    per-shard sorted snapshots — every skew-recovery barrier would
+    otherwise pay a redundant O(n log n) host sort). Returns
+    ``(parts, split_keys)``:
+
+    * ``parts[s]``      ``(KeySet, vals)`` — shard ``s``'s sorted slice,
+      ready for an independent :func:`bulk_build` (host or device);
+    * ``split_keys[s]`` ``(bytes_row uint8[L], len)`` — the run's minimum
+      key. The shard router replicates these: shard ``s`` owns
+      ``[split_keys[s], split_keys[s+1])`` and shard 0 additionally owns
+      everything below ``split_keys[0]``.
+
+    Requires ``n >= n_shards`` (an empty shard has no min key to route
+    by); shard sizes differ by at most one.
+    """
+    n = ks.n
+    assert n_shards >= 1, "n_shards must be >= 1"
+    assert n >= n_shards, (
+        f"sharded_partition needs at least one key per shard "
+        f"(n={n} < n_shards={n_shards})")
+    if presorted:
+        sb, sl, sv = ks.bytes, ks.lens, np.asarray(vals)
+    else:
+        order = K.lex_sort_indices(ks)
+        sb = ks.bytes[order]
+        sl = ks.lens[order]
+        sv = np.asarray(vals)[order]
+    base, rem = divmod(n, n_shards)
+    parts = []
+    split_keys = []
+    start = 0
+    for s in range(n_shards):
+        k = base + (1 if s < rem else 0)
+        parts.append((K.KeySet(sb[start:start + k].copy(),
+                               sl[start:start + k].copy()),
+                      sv[start:start + k].copy()))
+        split_keys.append((sb[start].copy(), int(sl[start])))
+        start += k
+    return parts, split_keys

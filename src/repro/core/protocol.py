@@ -52,12 +52,16 @@ class Sim:
     (the paper's unit of atomicity: one load / CAS / store).
     """
 
-    def __init__(self, keys=()):
+    def __init__(self, keys=(), seed: int = 0xFB):
         self.root_version = 0
         self.root_locked = False
         first = Node()
         self.anchors: List[Tuple[Any, Node]] = [(None, first)]  # sorted (low_key, node)
         self.log: List[Tuple] = []  # commit log: (op, key, val, info)
+        # explicit seeded RNG: run_schedule's fallback scheduling draws from
+        # it, so a failing hypothesis example replays deterministically from
+        # (ops, schedule, seed) alone — no module-level random state
+        self.rng = random.Random(seed)
         for k in sorted(keys):
             list(self.insert(k, ("init", k)))
 
@@ -263,11 +267,23 @@ class Sim:
         return d
 
 
-def run_schedule(sim: Sim, ops: List[Generator], schedule) -> None:
+def run_schedule(sim: Sim, ops: List[Generator], schedule,
+                 rng: Optional[random.Random] = None) -> None:
     """Interleave op coroutines. ``schedule`` yields indices into live ops
-    (ints; modulo live count) — hypothesis supplies arbitrary schedules."""
+    (ints; modulo live count) — hypothesis supplies arbitrary schedules.
+
+    Once the schedule is exhausted (or when it is ``None``) the remaining
+    steps draw from ``rng`` — an explicit ``random.Random`` (or an int
+    seed), defaulting to the simulator's own seeded ``sim.rng`` — so a
+    replay of the same (ops, schedule, seed) triple is bit-for-bit
+    deterministic."""
     live = list(ops)
-    rnd = random.Random(0xFB)
+    if rng is None:
+        rnd = sim.rng
+    elif isinstance(rng, int):
+        rnd = random.Random(rng)
+    else:
+        rnd = rng
     it = iter(schedule) if schedule is not None else None
     guard = 0
     while live:

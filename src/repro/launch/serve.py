@@ -16,7 +16,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import lm
-from repro.serving.engine import Engine, ServeConfig
+from repro.serving import Engine, ServeConfig
 
 
 def make_requests(n: int, vocab: int, shared_prefix: int, plen: int,

@@ -20,6 +20,12 @@ All cache operations are *batched tree ops* on the FB+-tree core:
                       drops tombstones and split fragmentation online
 This is exactly the paper's skewed workload: shared system prompts ⇒ heavy
 key-prefix skew ⇒ the tree behaves trie-like (feature comparison wins).
+
+**Sharded mode** (``n_shards > 1``, DESIGN.md §7): the cache runs on a
+``repro.shard.ShardedTree`` — digests are uniform, so evenly spaced
+first-byte sentinels seed a balanced range partition and every op above
+routes through the shard layer unchanged (same engine, same semantics);
+``compact`` becomes ``rebalance`` (the cross-shard barrier).
 """
 from __future__ import annotations
 
@@ -59,7 +65,7 @@ class PrefixCache:
     def __init__(self, n_pages: int = 4096, block_tokens: int = 32,
                  max_keys: int = 1 << 16,
                  engine: Optional[TraversalEngine] = None,
-                 compact_factor: float = 4.0):
+                 compact_factor: float = 4.0, n_shards: int = 1):
         self.block_tokens = block_tokens
         # serving never reads the modeled hardware counters, so the default
         # engine runs the stats-free hot path (DESIGN.md §3): leaf ids and
@@ -73,13 +79,90 @@ class PrefixCache:
         # compact_factor× more leaves than a fresh build of the live keys
         # would; 0/None disables the trigger (compact() stays callable)
         self.compact_factor = compact_factor
+        self.n_shards = int(n_shards)
         cfg = TreeConfig.plan(
             max_keys=max_keys, key_width=KEY_W,
             stacked=(engine is not None and engine.layout == "stacked"))
-        seed = K.make_keyset([b"\x00" * KEY_W], KEY_W)   # sentinel root key
-        self.tree = bulk_build(cfg, seed, np.array([-1], np.int32))
+        if self.n_shards > 1:
+            from repro import shard as SH
+            self._shard = SH
+            # one sentinel per shard, first bytes evenly spaced over the
+            # (uniform) digest space — balanced routing without rebalancing
+            seeds = [bytes([(256 * s) // self.n_shards]) +
+                     b"\x00" * (KEY_W - 1) for s in range(self.n_shards)]
+            ks = K.make_keyset(seeds, KEY_W)
+            self.tree = SH.sharded_build(
+                ks, np.full(self.n_shards, -1, np.int32), self.n_shards,
+                cfg=cfg)
+        else:
+            self._shard = None
+            seed = K.make_keyset([b"\x00" * KEY_W], KEY_W)  # sentinel root
+            self.tree = bulk_build(cfg, seed, np.array([-1], np.int32))
         self.stats = {"lookups": 0, "hits": 0, "inserts": 0, "evicts": 0,
                       "rebuilds": 0}
+
+    # ---- tree-op adapters: one call site per op, sharded or not ----
+    @property
+    def _cfg(self) -> TreeConfig:
+        return self.tree.config
+
+    def _leaf_count(self) -> int:
+        if self._shard is not None:
+            return sum(int(t.arrays.leaf_count) for t in self.tree.shards)
+        return int(self.tree.arrays.leaf_count)
+
+    def _key_headroom_ok(self, n_new: int) -> bool:
+        """Can the pool absorb ``n_new`` appends without a compact?
+        Sharded mode is conservative: assumes the whole batch routes to the
+        fullest shard."""
+        if self._shard is not None:
+            worst = max(int(t.arrays.key_count) for t in self.tree.shards)
+            return worst + n_new <= self._cfg.key_cap
+        return int(self.tree.arrays.key_count) + n_new <= self._cfg.key_cap
+
+    def _lookup(self, kb, kl):
+        if self._shard is not None:
+            return self._shard.lookup_batch(self.tree, kb, kl,
+                                            engine=self.engine)
+        return B.lookup_batch(self.tree, kb, kl, engine=self.engine)
+
+    def _insert(self, kb, kl, vals):
+        if self._shard is not None:
+            self.tree, rep, _ = self._shard.insert_batch(
+                self.tree, kb, kl, vals, engine=self.engine)
+        else:
+            self.tree, rep, _ = B.insert_batch(self.tree, kb, kl, vals,
+                                               engine=self.engine)
+        return rep
+
+    def _remove(self, kb, kl):
+        if self._shard is not None:
+            self.tree, rep = self._shard.remove_batch(self.tree, kb, kl,
+                                                      engine=self.engine)
+        else:
+            self.tree, rep = B.remove_batch(self.tree, kb, kl,
+                                            engine=self.engine)
+        return rep
+
+    def _scan(self, kb, kl, max_items):
+        """-> (kid-or-gkid, val, emitted); kid resolution goes through
+        :meth:`_kid_rows`."""
+        if self._shard is not None:
+            kid, val, em, _ = self._shard.range_scan(
+                self.tree, kb, kl, max_items=max_items, engine=self.engine)
+            return kid, val, em
+        kid, val, em, _ = B.range_scan(self.tree, kb, kl,
+                                       max_items=max_items,
+                                       engine=self.engine)
+        return kid, val, em
+
+    def _kid_rows(self, kid):
+        """Resolve scan-returned key ids to (bytes, lens)."""
+        if self._shard is not None:
+            return self.tree.key_rows(kid)
+        kb = np.asarray(self.tree.arrays.key_bytes)[kid]
+        kl = np.asarray(self.tree.arrays.key_lens)[kid]
+        return kb, kl
 
     # ---------------------------------------------------------------- admit
     def match(self, requests: Sequence[np.ndarray]
@@ -98,8 +181,7 @@ class PrefixCache:
         if not all_keys:
             return [0] * len(requests), [[] for _ in requests]
         ks = K.make_keyset(all_keys, KEY_W)
-        vals, rep = B.lookup_batch(self.tree, ks.bytes, ks.lens,
-                                   engine=self.engine)
+        vals, rep = self._lookup(ks.bytes, ks.lens)
         vals = np.asarray(vals)
         found = np.asarray(rep.found)
         self.stats["lookups"] += len(all_keys)
@@ -136,8 +218,7 @@ class PrefixCache:
         # only a rebuild reclaims their pool rows, and steady churn can march
         # key_count to key_cap while the live set stays small — compact
         # before appending would overflow (DESIGN.md §5)
-        if (int(self.tree.arrays.key_count) + len(new)
-                > self.tree.config.key_cap):
+        if not self._key_headroom_ok(len(new)):
             self.compact()
         ids = self.pool.alloc(len(new))
         if ids is None:
@@ -146,9 +227,7 @@ class PrefixCache:
             if ids is None:
                 return None
         ks = K.make_keyset(new, KEY_W)
-        self.tree, rep, _ = B.insert_batch(self.tree, ks.bytes, ks.lens,
-                                           ids.astype(np.int32),
-                                           engine=self.engine)
+        self._insert(ks.bytes, ks.lens, ids.astype(np.int32))
         self.pool.release(ids)       # cache-owned: evictable until pinned
         self.stats["inserts"] += len(new)
         return ids
@@ -163,26 +242,24 @@ class PrefixCache:
         # self.engine selects the scan route (DESIGN.md §6) and is
         # stats-free by default, so the rearranged counter costs nothing
         start = K.make_keyset([b"\x00" * KEY_W], KEY_W)
-        kid, val, emitted, _ = B.range_scan(
-            self.tree, start.bytes, start.lens,
-            max_items=min(4096, self.tree.config.key_cap),
-            engine=self.engine)
+        kid, val, emitted = self._scan(
+            start.bytes, start.lens,
+            max_items=min(4096, self._cfg.key_cap))
         kid, val = np.asarray(kid[0]), np.asarray(val[0])
         vict = set(victims.tolist())
         sel = [i for i in range(int(emitted[0]))
                if int(val[i]) in vict and kid[i] >= 0]
         if not sel:
             return
-        kb = np.asarray(self.tree.arrays.key_bytes)[kid[sel]]
-        kl = np.asarray(self.tree.arrays.key_lens)[kid[sel]]
-        self.tree, _ = B.remove_batch(self.tree, kb, kl, engine=self.engine)
+        kb, kl = self._kid_rows(kid[sel])
+        self._remove(kb, kl)
         self.pool.evict(victims)
         self.stats["evicts"] += len(sel)
         # cheap necessary condition first (leaf_count is a scalar pull;
         # frag_factor costs a device reduction): need >= 1 leaves, so
         # frag >= cf requires leaf_count >= cf
         if (self.compact_factor
-                and int(self.tree.arrays.leaf_count) >= self.compact_factor
+                and self._leaf_count() >= self.compact_factor
                 and self.frag_factor >= self.compact_factor):
             self.compact()
 
@@ -196,23 +273,37 @@ class PrefixCache:
         than the ``leaf_fill`` build target (no compaction needed then).
         """
         live = self.tree.n_keys_live
-        need = max(1, -(-live // self.tree.config.leaf_fill))
-        return int(self.tree.arrays.leaf_count) / need
+        need = max(1, -(-live // self._cfg.leaf_fill))
+        if self._shard is not None:
+            # a sharded build can never use fewer than one leaf per shard,
+            # so floor `need` there — otherwise a small live set reads as
+            # permanently fragmented and the evict-time trigger thrashes
+            # (rebalance can't drop below n_shards leaves)
+            need = max(need, self.tree.n_shards)
+        return self._leaf_count() / need
 
-    def compact(self) -> "B.BuildReport":
+    def compact(self):
         """Online rebuild (DESIGN.md §5): drop eviction tombstones, re-pack
         the key pool, and rebuild all levels device-side in one batch op.
+        Sharded mode runs the cross-shard form — ``repro.shard.rebalance``
+        (DESIGN.md §7) — which additionally re-balances the partition.
 
         A bulk-synchronous barrier between serving batches — cached page ids
         (the tree *values*) survive, but key ids/leaf ids/versions from
         before the barrier are invalidated, which is fine here: match()
-        re-traverses from scratch every batch.
+        re-traverses from scratch every batch. Returns the build/rebalance
+        report (both expose ``n_live`` and ``reclaimed``).
         """
-        tree, rep = B.rebuild(self.tree)
-        if bool(rep.error):   # pragma: no cover - cfg.plan() sizes the caps
-            # error=True arrays are garbage (DESIGN.md §5) — keep the old tree
-            raise RuntimeError("prefix-cache rebuild exceeded tree capacity")
-        self.tree = tree
+        if self._shard is not None:
+            self.tree, rep = self._shard.rebalance(self.tree)
+        else:
+            tree, rep = B.rebuild(self.tree)
+            if bool(rep.error):  # pragma: no cover - cfg.plan() sizes caps
+                # error=True arrays are garbage (DESIGN.md §5) — keep the
+                # old tree
+                raise RuntimeError(
+                    "prefix-cache rebuild exceeded tree capacity")
+            self.tree = tree
         self.stats["rebuilds"] += 1
         return rep
 

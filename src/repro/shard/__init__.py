@@ -1,0 +1,25 @@
+"""Sharded-tree subsystem (DESIGN.md §7): one FBTree per range shard over a
+``jax.sharding.Mesh``, a replicated split-key router, shard-local dispatch
+of every batch op through the traversal engine, cross-shard range scans,
+and ``rebalance`` as the skew-recovery barrier.
+
+Stable public surface — import from here, not from the submodules:
+
+    from repro.shard import ShardedTree, sharded_build, lookup_batch, ...
+"""
+from .build import sharded_build
+from .mesh import make_shard_mesh, shard_devices
+from .ops import (RebalanceReport, ShardOpReport, insert_batch,
+                  lookup_batch, range_scan, rebalance, remove_batch,
+                  update_batch)
+from .router import ShardRouter, make_router, route
+from .tree import ShardedTree
+
+__all__ = [
+    "ShardedTree", "sharded_build",
+    "ShardRouter", "make_router", "route",
+    "make_shard_mesh", "shard_devices",
+    "lookup_batch", "update_batch", "insert_batch", "remove_batch",
+    "range_scan", "rebalance",
+    "ShardOpReport", "RebalanceReport",
+]

@@ -1,0 +1,76 @@
+"""Sharded bulk build (DESIGN.md §7): the §5 pipeline with step 1 — the
+global sort — going distributed, steps 2–3 unchanged per shard.
+
+``fbtree.sharded_partition`` sorts the key set once and splits it into
+balanced contiguous runs; each run then feeds an ordinary per-shard
+``bulk_build`` (host reference or the jit device pipeline — the §5 parity
+contract holds shard by shard), and the runs' minimum keys become the
+replicated router. Every shard shares one ``TreeConfig`` planned for
+``per_shard_max_keys`` (default: the full ``max_keys``, so any single
+shard can absorb the whole key set before a ``rebalance`` — skew-safe, at
+S× pool memory; pass a tighter value when memory matters).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core import keys as K
+from repro.core.fbtree import TreeConfig, bulk_build, sharded_partition
+
+from .mesh import make_shard_mesh, place_shard, shard_devices
+from .router import make_router
+from .tree import ShardedTree
+
+__all__ = ["sharded_build"]
+
+
+def sharded_build(ks: K.KeySet, vals, n_shards: int,
+                  max_keys: Optional[int] = None,
+                  per_shard_max_keys: Optional[int] = None,
+                  device: bool = False, mesh: Any = "auto",
+                  cfg: Optional[TreeConfig] = None, presorted: bool = False,
+                  **plan_kw) -> ShardedTree:
+    """Bulk-load a :class:`ShardedTree` from (possibly unsorted) unique keys.
+
+    Arguments mirror ``bulk_build`` + ``TreeConfig.plan``:
+
+    * ``n_shards``            number of range partitions (``ks.n >=
+      n_shards``).
+    * ``max_keys``            global capacity plan (default ``ks.n``).
+    * ``per_shard_max_keys``  per-shard capacity (default ``max_keys``:
+      every shard planned for the whole set — skew-safe).
+    * ``device``              per-shard device build (§5 jit pipeline)
+      instead of the host reference; both are bit-identical per shard.
+    * ``mesh``                ``"auto"`` builds a 1-D shard mesh over the
+      local devices; ``None`` skips placement (arrays stay on the default
+      device); or pass an explicit ``jax.sharding.Mesh``. Shards are
+      committed to mesh devices round-robin.
+    * ``cfg``                 explicit shared per-shard ``TreeConfig``
+      (overrides the plan; all shards must use one config so ops compile
+      once).
+    * ``presorted``           the keys are already in the global sort
+      order — skip step 1's sort (rebalance's concatenated snapshots).
+    * ``plan_kw``             forwarded to ``TreeConfig.plan`` (ns, fs,
+      leaf_fill, val_dtype, stacked, ...).
+    """
+    assert n_shards >= 1
+    if cfg is None:
+        if max_keys is None:
+            max_keys = ks.n
+        if per_shard_max_keys is None:
+            per_shard_max_keys = max_keys
+        cfg = TreeConfig.plan(max_keys=int(per_shard_max_keys),
+                              key_width=ks.width, **plan_kw)
+    parts, split_keys = sharded_partition(ks, vals, n_shards,
+                                          presorted=presorted)
+    if mesh == "auto":
+        mesh = make_shard_mesh(n_shards)
+    devices = shard_devices(mesh, n_shards)
+    shards = []
+    for (pks, pvals), dev in zip(parts, devices):
+        t = bulk_build(cfg, pks, np.asarray(pvals), device=device)
+        shards.append(place_shard(t, dev))
+    return ShardedTree(shards=tuple(shards), router=make_router(split_keys),
+                       devices=devices, mesh=mesh)

@@ -1,0 +1,49 @@
+"""Shard meshes and device placement (DESIGN.md §7).
+
+Single-host multi-device first: a 1-D ``jax.sharding.Mesh`` over the
+``"shard"`` axis, shards assigned round-robin when there are more shards
+than devices (every shard still gets a concrete device, so a 1-device CPU
+run degrades to colocated shards with identical semantics). Tests and CI
+force a multi-device CPU with ``XLA_FLAGS=--xla_force_host_platform_
+device_count=N`` — set *before* the first jax import, which is why the
+benchmark wires it through the environment rather than here.
+
+Importing this module never touches jax device state (same rule as
+``launch/mesh.py``); devices are only enumerated when a mesh is built.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+__all__ = ["make_shard_mesh", "shard_devices", "place_shard"]
+
+
+def make_shard_mesh(n_shards: int, devices: Optional[Sequence] = None
+                    ) -> Mesh:
+    """1-D ``("shard",)`` mesh over ``min(n_shards, len(devices))`` devices
+    (default: all local devices). With one device this is the degenerate
+    single-device mesh every test environment supports."""
+    if devices is None:
+        devices = jax.devices()
+    n = max(1, min(int(n_shards), len(devices)))
+    return Mesh(np.asarray(devices[:n]), ("shard",))
+
+
+def shard_devices(mesh: Optional[Mesh], n_shards: int) -> Tuple:
+    """Round-robin device per shard (``None`` per shard when no mesh —
+    arrays stay wherever jax put them)."""
+    if mesh is None:
+        return (None,) * n_shards
+    devs = list(mesh.devices.flat)
+    return tuple(devs[s % len(devs)] for s in range(n_shards))
+
+
+def place_shard(tree, device):
+    """Commit one shard's arrays to its device (no-op without a device)."""
+    if device is None:
+        return tree
+    return jax.device_put(tree, device)

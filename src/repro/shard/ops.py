@@ -1,0 +1,297 @@
+"""Routed batch ops over a ShardedTree (DESIGN.md §7).
+
+Dispatch model: the router buckets the query batch by owning shard, then a
+host loop launches ONE jitted shard-local op per shard that owns work —
+the same ``core.batch_ops`` entry points every unsharded call site uses,
+through the same ``TraversalEngine`` (any backend/layout, including the
+fused kernels). Launches are asynchronous per device, so with a
+multi-device mesh the shards genuinely overlap; results are combined
+host-side by owner select.
+
+Shapes stay static by running each shard over the *full* batch with the
+routed-op ``mask`` hook (``core.batch_ops``): masked-out lanes read
+harmlessly and never write, so a shard-local op on a full batch commits
+exactly its owned lanes. Shards owning no lanes are skipped outright.
+
+Cross-shard ``range_scan``: each query starts in its owner shard; lanes
+that exhaust the owner's leaf chain before ``max_items`` spill to the next
+shard (range partition ⇒ the next shard's first key is the chain's
+successor) and the per-shard emissions — each ascending, each riding the
+§6 lazy-rearrangement fast path — concatenate in shard order into the
+globally ascending result. Filled lanes are parked on an all-0xFF start
+key so later shards do one trivial descent for them, and the host loop
+stops as soon as no lane is active.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import batch_ops as B
+from repro.core import keys as K
+from repro.core.fbtree import EMPTY
+from repro.core.traverse import TraversalEngine
+
+from .build import sharded_build
+from .router import route
+from .tree import ShardedTree
+
+__all__ = ["ShardOpReport", "RebalanceReport", "lookup_batch",
+           "update_batch", "insert_batch", "remove_batch", "range_scan",
+           "rebalance"]
+
+
+class ShardOpReport(NamedTuple):
+    """Cross-shard op outcome (host numpy — produced after the combine)."""
+    found: np.ndarray       # bool [B] — owner shard's found
+    conflicts: np.ndarray   # int32 — in-batch dedupe losers (global, once)
+    splits: np.ndarray      # int32 — leaf splits summed over shards
+    error: np.ndarray       # bool — any shard hit a capacity error
+    owner: np.ndarray       # int32 [B] — routed shard per query
+    shards_hit: int         # shards that owned at least one lane
+
+
+class RebalanceReport(NamedTuple):
+    """Outcome of a cross-shard rebalance (a bulk-synchronous barrier)."""
+    n_live: int             # keys carried into the new partition
+    reclaimed: int          # key-pool rows freed across shards
+    counts_before: Tuple[int, ...]   # live keys per shard pre-barrier
+    counts_after: Tuple[int, ...]    # live keys per shard post-barrier
+
+
+def _put(x, dev):
+    return x if dev is None else jax.device_put(x, dev)
+
+
+def _owner_masks(st: ShardedTree, qb, ql):
+    """Route once; per-shard owner masks as host bools."""
+    qb = jnp.asarray(qb)
+    ql = jnp.asarray(ql)
+    owner = np.asarray(route(st.router, qb, ql))
+    return qb, ql, owner
+
+
+def lookup_batch(st: ShardedTree, qb, ql,
+                 engine: Optional[TraversalEngine] = None):
+    """Batched point lookup across shards. Returns ``(vals [B], report)``;
+    ``vals``/``found`` are bit-identical to ``core.batch_ops.lookup_batch``
+    on one unsharded tree over the same keys."""
+    qb, ql, owner = _owner_masks(st, qb, ql)
+    Bn = qb.shape[0]
+    vals = np.zeros((Bn,), dtype=np.asarray(
+        jnp.zeros((), st.config.val_dtype)).dtype)
+    found = np.zeros((Bn,), dtype=bool)
+    pending = []
+    for s, t in enumerate(st.shards):
+        sel = owner == s
+        if not sel.any():
+            continue
+        dev = st.devices[s]
+        v, rep = B.lookup_batch(t, _put(qb, dev), _put(ql, dev),
+                                engine=engine)
+        pending.append((sel, v, rep.found))     # async: combine later
+    for sel, v, f in pending:
+        vals[sel] = np.asarray(v)[sel]
+        found[sel] = np.asarray(f)[sel]
+    rep = ShardOpReport(found=found, conflicts=np.int32(0),
+                        splits=np.int32(0), error=np.bool_(False),
+                        owner=owner, shards_hit=len(pending))
+    return vals, rep
+
+
+def _routed_mutation(st: ShardedTree, owner, run_one):
+    """Shared mutation loop: run ``run_one(shard_tree, mask, dev)`` on every
+    shard owning lanes; returns (new shards, per-shard outcomes)."""
+    shards = list(st.shards)
+    outcomes = []
+    for s, t in enumerate(st.shards):
+        sel = owner == s
+        if not sel.any():
+            continue
+        dev = st.devices[s]
+        mask = _put(jnp.asarray(sel), dev)
+        t2, out = run_one(t, mask, dev)
+        shards[s] = t2
+        outcomes.append((sel, out))
+    return tuple(shards), outcomes
+
+
+def update_batch(st: ShardedTree, qb, ql, vals,
+                 engine: Optional[TraversalEngine] = None):
+    """Routed blind update. Returns ``(ShardedTree', report)``."""
+    qb, ql, owner = _owner_masks(st, qb, ql)
+    vals = jnp.asarray(vals)
+
+    def run_one(t, mask, dev):
+        t2, rep = B.update_batch(t, _put(qb, dev), _put(ql, dev),
+                                 _put(vals, dev), engine=engine, mask=mask)
+        return t2, rep
+    shards, outcomes = _routed_mutation(st, owner, run_one)
+    return st.replace(shards=shards), _combine(outcomes, owner)
+
+
+def remove_batch(st: ShardedTree, qb, ql,
+                 engine: Optional[TraversalEngine] = None):
+    """Routed tombstone removal. Returns ``(ShardedTree', report)``."""
+    qb, ql, owner = _owner_masks(st, qb, ql)
+
+    def run_one(t, mask, dev):
+        t2, rep = B.remove_batch(t, _put(qb, dev), _put(ql, dev),
+                                 engine=engine, mask=mask)
+        return t2, rep
+    shards, outcomes = _routed_mutation(st, owner, run_one)
+    return st.replace(shards=shards), _combine(outcomes, owner)
+
+
+def insert_batch(st: ShardedTree, qb, ql, vals,
+                 engine: Optional[TraversalEngine] = None, **kw):
+    """Routed upsert. Returns ``(ShardedTree', report, rounds)`` —
+    ``rounds`` is the max split rounds any shard needed. New keys land in
+    their owner shard only (range partition preserved); a per-shard
+    capacity overflow raises exactly as the unsharded op does —
+    ``rebalance`` is the recovery for skew-driven overflow."""
+    qb, ql, owner = _owner_masks(st, qb, ql)
+    vals = jnp.asarray(vals)
+    rounds_max = 0
+
+    def run_one(t, mask, dev):
+        nonlocal rounds_max
+        t2, rep, rounds = B.insert_batch(t, _put(qb, dev), _put(ql, dev),
+                                         _put(vals, dev), engine=engine,
+                                         mask=mask, **kw)
+        rounds_max = max(rounds_max, rounds)
+        return t2, rep
+    shards, outcomes = _routed_mutation(st, owner, run_one)
+    return (st.replace(shards=shards), _combine(outcomes, owner),
+            rounds_max)
+
+
+def _combine(outcomes, owner) -> ShardOpReport:
+    found = np.zeros(owner.shape, dtype=bool)
+    splits = 0
+    error = False
+    conflicts = 0
+    for i, (sel, rep) in enumerate(outcomes):
+        found[sel] = np.asarray(rep.found)[sel]
+        splits += int(rep.splits)
+        error = error or bool(rep.error)
+        if i == 0:
+            # per-shard ops dedupe the FULL batch before the mask ANDs in,
+            # so any one report already carries the global conflict count
+            conflicts = int(rep.conflicts)
+    return ShardOpReport(found=found, conflicts=np.int32(conflicts),
+                         splits=np.int32(splits), error=np.bool_(error),
+                         owner=owner, shards_hit=len(outcomes))
+
+
+# --------------------------------------------------------------------------
+# cross-shard range scan
+# --------------------------------------------------------------------------
+
+def range_scan(st: ShardedTree, qb, ql, max_items: int = 64,
+               engine: Optional[TraversalEngine] = None):
+    """Cross-shard range scan with spill-to-next-shard continuation.
+
+    Returns ``(gkid int64 [B, max_items], val [B, max_items], emitted [B],
+    rearranged [B])`` — ascending per lane, starting at the first key >=
+    the query; ``gkid`` is the global key id (``ShardedTree.key_rows``
+    resolves it), EMPTY past ``emitted``. Values, emitted counts, and the
+    resolved key bytes are bit-identical to the unsharded §6 scan;
+    ``rearranged`` sums the dirty leaves visited across shards (leaf
+    chunking differs per partition, so it is *not* parity-comparable).
+
+    Each per-shard scan goes through the engine's §6 scan path (fused
+    kernel or jnp chain walk) and keeps its lazy-rearrangement ordering
+    guarantee; the merge is pure concatenation because the partition is by
+    key range.
+    """
+    qb, ql, owner = _owner_masks(st, qb, ql)
+    Bn = qb.shape[0]
+    L = st.config.key_width
+    stride = st.kid_stride
+    vdt = np.asarray(jnp.zeros((), st.config.val_dtype)).dtype
+    out_kid = np.full((Bn, max_items), EMPTY, dtype=np.int64)
+    out_val = np.zeros((Bn, max_items), dtype=vdt)
+    emitted = np.zeros((Bn,), dtype=np.int32)
+    rearranged = np.zeros((Bn,), dtype=np.int32)
+    park_b = np.full((L,), 0xFF, dtype=np.uint8)   # parked lanes descend to
+    park_l = np.int32(L)                           # the last leaf, emit ~0
+    qb_np = np.asarray(qb)
+    ql_np = np.asarray(ql)
+    cols = np.arange(max_items, dtype=np.int32)[None, :]
+    rows = np.broadcast_to(np.arange(Bn, dtype=np.int32)[:, None],
+                           (Bn, max_items))
+
+    for s, t in enumerate(st.shards):
+        active = (owner <= s) & (emitted < max_items)
+        if not active.any():
+            # stop only when NO lane can still gain: lanes owned by later
+            # shards haven't started yet (owners are clustered, e.g. {0, 3})
+            if not (owner > s).any():
+                break
+            continue
+        sqb = np.where(active[:, None], qb_np, park_b[None, :])
+        sql = np.where(active, ql_np, park_l).astype(np.int32)
+        dev = st.devices[s]
+        kid_s, val_s, em_s, re_s = B.range_scan(
+            t, _put(jnp.asarray(sqb), dev), _put(jnp.asarray(sql), dev),
+            max_items=max_items, engine=engine)
+        kid_s = np.asarray(kid_s)
+        val_s = np.asarray(val_s)
+        em_s = np.asarray(em_s)
+        take = np.where(active,
+                        np.minimum(em_s, max_items - emitted), 0)
+        ok = cols < take[:, None]          # emitted slots only: kid_s >= 0
+        dst = emitted[:, None] + cols
+        out_kid[rows[ok], dst[ok]] = kid_s[ok].astype(np.int64) + s * stride
+        out_val[rows[ok], dst[ok]] = val_s[ok]
+        emitted += take.astype(np.int32)
+        rearranged += np.where(active, np.asarray(re_s), 0).astype(np.int32)
+    return out_kid, out_val, emitted, rearranged
+
+
+# --------------------------------------------------------------------------
+# rebalance — the skew-recovery barrier
+# --------------------------------------------------------------------------
+
+def rebalance(st: ShardedTree, device: bool = True
+              ) -> Tuple[ShardedTree, RebalanceReport]:
+    """Re-partition the live key set evenly across shards.
+
+    Built on the rebuild primitive (DESIGN.md §5/§7):
+    ``core.batch_ops.gather_live_sorted`` snapshots each shard — sorted,
+    tombstones dropped, pool compacted, the exact front half of
+    ``rebuild`` — and because shards are range-partitioned, concatenating
+    the snapshots in shard order IS the globally sorted live set. That set
+    re-enters :func:`repro.shard.build.sharded_build` with the *same*
+    shared ``TreeConfig`` (no recompiles) and the same mesh placement:
+    step 1's sort re-distributed, steps 2–3 (the §5 device build) per
+    shard, and a fresh router from the new balanced boundaries.
+
+    Same barrier semantics as ``rebuild``: key ids (global ones included)
+    are not stable across it, versions reset, values carry over. With
+    ``n_shards == 1`` this degenerates to exactly ``rebuild``.
+    """
+    counts_before = tuple(int(t.n_keys_live) for t in st.shards)
+    kbs, kls, vvs = [], [], []
+    reclaimed = 0
+    for t in st.shards:
+        kb, kl, _, vv, n_live = B.gather_live_sorted(t)
+        n = int(n_live)
+        reclaimed += int(t.arrays.key_count) - n
+        kbs.append(np.asarray(kb)[:n])
+        kls.append(np.asarray(kl)[:n])
+        vvs.append(np.asarray(vv)[:n])
+    ks = K.KeySet(np.concatenate(kbs, axis=0), np.concatenate(kls, axis=0))
+    vals = np.concatenate(vvs, axis=0)
+    # the concatenation is already globally sorted (invariant above) —
+    # presorted skips re-running step 1's lexsort at every barrier
+    st2 = sharded_build(ks, vals, st.n_shards, cfg=st.config, device=device,
+                        mesh=st.mesh, presorted=True)
+    rep = RebalanceReport(
+        n_live=ks.n, reclaimed=reclaimed, counts_before=counts_before,
+        counts_after=tuple(int(t.n_keys_live) for t in st2.shards))
+    return st2, rep

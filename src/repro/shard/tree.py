@@ -1,0 +1,138 @@
+"""ShardedTree container (DESIGN.md §7): one FBTree per shard + a
+replicated split-key router.
+
+The inner levels of every shard are ordinary FBTree levels over that
+shard's own leaf/key arrays — "replicated inner levels, sharded leaf/key
+pool" falls out of the range partition: each shard's (small) tree is fully
+resident wherever its queries are routed, while the global key pool and
+leaf chain exist only as the disjoint union of the per-shard arrays. All
+shards share ONE ``TreeConfig``, so every batched op compiles once and
+runs against any shard (and the dispatch loop reuses the same executable
+across devices).
+
+Invariants (`tests/test_shard_tree.py` pins them):
+
+* **Range partition.** Shard ``s`` holds exactly the live keys in
+  ``[split[s], split[s+1])`` (shard 0's range is open below). Routed
+  inserts preserve this; only ``rebalance`` moves the boundaries.
+* **Global order = shard order.** Concatenating the shards' sorted live
+  key sets in shard order is the globally sorted live key set — the
+  property the cross-shard range scan's merge relies on.
+* **Parity.** Every batch op on a ShardedTree is bit-identical (values,
+  found-ness, emitted counts, resolved key bytes) to the same op on one
+  unsharded tree over the same keys, for any shard count.
+
+Key ids are pool-local per shard; cross-shard APIs (``range_scan``) return
+**global key ids** ``gkid = shard * (key_cap + 1) + kid`` (int64, EMPTY
+stays -1) which :meth:`ShardedTree.key_rows` resolves back to bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.fbtree import EMPTY, FBTree, TreeConfig
+
+from .router import ShardRouter
+
+__all__ = ["ShardedTree"]
+
+
+@dataclasses.dataclass
+class ShardedTree:
+    """Host-side container: per-shard trees, router, optional placement.
+
+    Not a jax pytree — dispatch is a host loop launching one jitted op per
+    shard (async on that shard's device); only the per-shard FBTrees and
+    the router live on device.
+    """
+    shards: Tuple[FBTree, ...]
+    router: ShardRouter
+    devices: Tuple = ()            # per-shard jax device (None = unplaced)
+    mesh: object = None            # jax.sharding.Mesh | None (documentation
+    #                                + bench introspection; ops only use
+    #                                `devices`)
+
+    def __post_init__(self):
+        if not self.devices:
+            self.devices = (None,) * len(self.shards)
+        assert len(self.devices) == len(self.shards)
+        assert self.router.n_shards == len(self.shards)
+
+    # ------------------------------------------------------------- shape
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def config(self) -> TreeConfig:
+        return self.shards[0].config
+
+    @property
+    def kid_stride(self) -> int:
+        """Rows per shard key pool — the global-key-id stride."""
+        return self.config.key_cap + 1
+
+    @property
+    def n_keys_live(self) -> int:
+        return sum(t.n_keys_live for t in self.shards)
+
+    def replace(self, **kw) -> "ShardedTree":
+        return dataclasses.replace(self, **kw)
+
+    # ------------------------------------------------------- global kids
+    def split_gkid(self, gkid: np.ndarray):
+        """Decode global key ids -> (shard [.., ], local kid [..,]);
+        EMPTY lanes map to (0, EMPTY)."""
+        g = np.asarray(gkid, dtype=np.int64)
+        ok = g >= 0
+        shard = np.where(ok, g // self.kid_stride, 0).astype(np.int32)
+        kid = np.where(ok, g % self.kid_stride, EMPTY).astype(np.int32)
+        return shard, kid
+
+    def key_rows(self, gkid: np.ndarray):
+        """Resolve global key ids to ``(key_bytes uint8[.., L], lens
+        int32[..])``; EMPTY ids resolve to zero rows."""
+        shard, kid = self.split_gkid(gkid)
+        L = self.config.key_width
+        out_b = np.zeros(shard.shape + (L,), dtype=np.uint8)
+        out_l = np.zeros(shard.shape, dtype=np.int32)
+        for s, t in enumerate(self.shards):
+            sel = (shard == s) & (kid >= 0)
+            if not sel.any():
+                continue
+            kb = np.asarray(t.arrays.key_bytes)
+            kl = np.asarray(t.arrays.key_lens)
+            out_b[sel] = kb[kid[sel]]
+            out_l[sel] = kl[kid[sel]]
+        return out_b, out_l
+
+    # ----------------------------------------------------- op delegation
+    # thin method facade over repro.shard.ops (imported lazily to keep the
+    # module graph acyclic); the functional API is the primary surface
+    def lookup(self, qb, ql, engine=None):
+        from . import ops
+        return ops.lookup_batch(self, qb, ql, engine=engine)
+
+    def update(self, qb, ql, vals, engine=None):
+        from . import ops
+        return ops.update_batch(self, qb, ql, vals, engine=engine)
+
+    def insert(self, qb, ql, vals, engine=None, **kw):
+        from . import ops
+        return ops.insert_batch(self, qb, ql, vals, engine=engine, **kw)
+
+    def remove(self, qb, ql, engine=None):
+        from . import ops
+        return ops.remove_batch(self, qb, ql, engine=engine)
+
+    def range_scan(self, qb, ql, max_items: int = 64, engine=None):
+        from . import ops
+        return ops.range_scan(self, qb, ql, max_items=max_items,
+                              engine=engine)
+
+    def rebalance(self, device: bool = True):
+        from . import ops
+        return ops.rebalance(self, device=device)

@@ -2,8 +2,7 @@
 import numpy as np
 import pytest
 
-from repro.serving.pages import PagePool
-from repro.serving.prefix_cache import PrefixCache, chain_keys
+from repro.serving import PagePool, PrefixCache, chain_keys
 
 
 def test_page_pool_alloc_free_lru():
