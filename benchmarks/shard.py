@@ -80,7 +80,7 @@ def run(datasets=("rand-int", "ycsb", "url"), n_keys=20_000, n_ops=8_192,
                                           engine=eng)
             assert (f_ref == rep_sh.found).all(), (ds, n_shards, "found")
             assert (v_ref == v_sh).all(), (ds, n_shards, "vals")
-            gk, sv_sh, em_sh, _ = S.range_scan(st, sqb, sql,
+            gk, sv_sh, em_sh, _, _ = S.range_scan(st, sqb, sql,
                                                max_items=scan_len,
                                                engine=eng)
             assert (em_ref == em_sh).all(), (ds, n_shards, "emitted")

@@ -9,6 +9,10 @@ from .batch_ops import (lookup_batch, update_batch, insert_batch, remove_batch,
                         range_scan, rebuild, traverse_probe, OpReport,
                         BuildReport)
 from .baseline import lookup_variant, VARIANTS
+from .fsck import FsckReport, check_tree
+from .faults import (FaultInjected, ShardDropped, FaultSpec, FaultPlan,
+                     RetryPolicy)
+from .lifecycle import TreeVersionManager, PublishReport
 
 __all__ = [
     "FBTree", "TreeConfig", "bulk_build", "stack_levels", "KeySet",
@@ -17,4 +21,7 @@ __all__ = [
     "register_backend", "available_backends", "lookup_batch", "update_batch",
     "insert_batch", "remove_batch", "range_scan", "rebuild", "traverse_probe",
     "OpReport", "BuildReport", "lookup_variant", "VARIANTS",
+    "FsckReport", "check_tree", "FaultInjected", "ShardDropped",
+    "FaultSpec", "FaultPlan", "RetryPolicy", "TreeVersionManager",
+    "PublishReport",
 ]

@@ -782,6 +782,10 @@ def range_scan(tree: FBTree, qb, ql, max_items: int = 64,
     rearranged [B])``; ``rearranged`` (dirty leaves visited) is all-zero
     under a stats-free engine.
     """
+    if max_items < 1:
+        raise ValueError(
+            f"range_scan: max_items must be >= 1, got {max_items} — each "
+            f"lane emits up to max_items (key, value) pairs")
     eng = resolve_engine(engine)
     fused = eng.scan_path()
     if fused is not None:

@@ -92,6 +92,39 @@ class TreeConfig:
     # driven by one lax.scan. Both layouts are always materialized.
     stacked: bool = False
 
+    def __post_init__(self):
+        # fail at construction with an actionable message instead of a
+        # shape explosion (or a silent mis-build) in the first jitted op
+        def bad(msg: str):
+            raise ValueError(f"TreeConfig: {msg}")
+        if self.key_width < 1:
+            bad(f"key_width must be >= 1, got {self.key_width} (bytes per "
+                f"fixed-width key-pool row)")
+        if self.ns < 2:
+            bad(f"ns must be >= 2, got {self.ns} — a node needs at least "
+                f"two slots to ever split")
+        if self.fs < 1:
+            bad(f"fs must be >= 1, got {self.fs} (feature bytes per "
+                f"anchor)")
+        if not (1 <= self.leaf_fill <= self.ns):
+            bad(f"leaf_fill must be in [1, ns={self.ns}], got "
+                f"{self.leaf_fill} — TreeConfig.plan clamps it for you")
+        if not (1 <= self.inner_fill <= self.ns):
+            bad(f"inner_fill must be in [1, ns={self.ns}], got "
+                f"{self.inner_fill} — TreeConfig.plan clamps it for you")
+        if self.n_levels < 1:
+            bad(f"n_levels must be >= 1, got {self.n_levels}")
+        if len(self.level_caps) != self.n_levels:
+            bad(f"level_caps has {len(self.level_caps)} entries for "
+                f"n_levels={self.n_levels} — one cap per inner level, "
+                f"root first (TreeConfig.plan derives them)")
+        if any(c < 1 for c in self.level_caps):
+            bad(f"level_caps must all be >= 1, got {self.level_caps}")
+        if self.leaf_cap < 1:
+            bad(f"leaf_cap must be >= 1, got {self.leaf_cap}")
+        if self.key_cap < 1:
+            bad(f"key_cap must be >= 1, got {self.key_cap}")
+
     @staticmethod
     def plan(max_keys: int, key_width: int, ns: int = 64, fs: int = 4,
              leaf_fill: int = 48, inner_fill: int = 48,
@@ -657,10 +690,15 @@ def sharded_partition(ks: K.KeySet, vals, n_shards: int,
     by); shard sizes differ by at most one.
     """
     n = ks.n
-    assert n_shards >= 1, "n_shards must be >= 1"
-    assert n >= n_shards, (
-        f"sharded_partition needs at least one key per shard "
-        f"(n={n} < n_shards={n_shards})")
+    if n_shards < 1:
+        raise ValueError(f"sharded_partition: n_shards must be >= 1, "
+                         f"got {n_shards}")
+    if n < n_shards:
+        raise ValueError(
+            f"sharded_partition needs at least one key per shard "
+            f"(n={n} < n_shards={n_shards}): an empty shard has no "
+            f"minimum key for the router — lower n_shards or seed "
+            f"sentinel keys")
     if presorted:
         sb, sl, sv = ks.bytes, ks.lens, np.asarray(vals)
     else:

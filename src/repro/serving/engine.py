@@ -36,6 +36,11 @@ class ServeConfig:
     # traversal engine for the prefix-cache tree (None -> core default)
     tree_backend: Optional[str] = None
     tree_layout: Optional[str] = None
+    # prefix-cache tree shards (>1 routes through repro.shard, DESIGN.md §7)
+    tree_shards: int = 1
+    # fault-injection plan for the cache's lifecycle + shard dispatch
+    # (core.faults.FaultPlan; None = fault-free serving) — chaos harness
+    faults: Optional[object] = None
 
 
 @dataclasses.dataclass
@@ -60,7 +65,9 @@ class Engine:
                                        scfg.tree_layout, collect_stats=False)
                        if (scfg.tree_backend or scfg.tree_layout) else None)
         self.prefix = PrefixCache(scfg.n_pages, scfg.block_tokens,
-                                  engine=tree_engine)
+                                  engine=tree_engine,
+                                  n_shards=scfg.tree_shards,
+                                  faults=scfg.faults)
         # host page store: [n_pages, L, 2, block, kv, hd]
         L = cfg.n_layers
         self.page_kv = np.zeros(

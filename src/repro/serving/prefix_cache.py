@@ -16,8 +16,10 @@ All cache operations are *batched tree ops* on the FB+-tree core:
                       when the cache's engine backend registers one, else
                       the jnp chain walk; leaves the cache keeps ordered
                       ride the lazy-rearrangement fast path)
-  compact          -> rebuild (device-side bulk build, DESIGN.md §5):
-                      drops tombstones and split fragmentation online
+  compact          -> rebuild (device-side bulk build, DESIGN.md §5) run
+                      as an atomic fsck-gated publish through
+                      core.lifecycle.TreeVersionManager (DESIGN.md §8):
+                      a failed barrier leaves the old tree serving
 This is exactly the paper's skewed workload: shared system prompts ⇒ heavy
 key-prefix skew ⇒ the tree behaves trie-like (feature comparison wins).
 
@@ -36,7 +38,9 @@ import numpy as np
 
 from repro.core import batch_ops as B
 from repro.core import keys as K
+from repro.core.faults import FaultPlan, RetryPolicy
 from repro.core.fbtree import TreeConfig, bulk_build
+from repro.core.lifecycle import PublishReport, TreeVersionManager
 from repro.core.traverse import TraversalEngine
 
 from .pages import PagePool
@@ -65,7 +69,9 @@ class PrefixCache:
     def __init__(self, n_pages: int = 4096, block_tokens: int = 32,
                  max_keys: int = 1 << 16,
                  engine: Optional[TraversalEngine] = None,
-                 compact_factor: float = 4.0, n_shards: int = 1):
+                 compact_factor: float = 4.0, n_shards: int = 1,
+                 faults: Optional[FaultPlan] = None,
+                 retry: Optional[RetryPolicy] = None):
         self.block_tokens = block_tokens
         # serving never reads the modeled hardware counters, so the default
         # engine runs the stats-free hot path (DESIGN.md §3): leaf ids and
@@ -80,6 +86,8 @@ class PrefixCache:
         # would; 0/None disables the trigger (compact() stays callable)
         self.compact_factor = compact_factor
         self.n_shards = int(n_shards)
+        self.faults = faults
+        self.retry = retry
         cfg = TreeConfig.plan(
             max_keys=max_keys, key_width=KEY_W,
             stacked=(engine is not None and engine.layout == "stacked"))
@@ -91,17 +99,27 @@ class PrefixCache:
             seeds = [bytes([(256 * s) // self.n_shards]) +
                      b"\x00" * (KEY_W - 1) for s in range(self.n_shards)]
             ks = K.make_keyset(seeds, KEY_W)
-            self.tree = SH.sharded_build(
+            tree = SH.sharded_build(
                 ks, np.full(self.n_shards, -1, np.int32), self.n_shards,
                 cfg=cfg)
         else:
             self._shard = None
             seed = K.make_keyset([b"\x00" * KEY_W], KEY_W)  # sentinel root
-            self.tree = bulk_build(cfg, seed, np.array([-1], np.int32))
+            tree = bulk_build(cfg, seed, np.array([-1], np.int32))
+        # all tree state lives behind the version manager (DESIGN.md §8):
+        # in-place ops commit under the current version; compact() is an
+        # atomic fsck-gated publish, so a failed barrier can never leave
+        # the cache serving from a half-built tree
+        self.lifecycle = TreeVersionManager(tree, faults=faults)
         self.stats = {"lookups": 0, "hits": 0, "inserts": 0, "evicts": 0,
                       "rebuilds": 0}
 
     # ---- tree-op adapters: one call site per op, sharded or not ----
+    @property
+    def tree(self):
+        """The serving tree — always the current published version."""
+        return self.lifecycle.current
+
     @property
     def _cfg(self) -> TreeConfig:
         return self.tree.config
@@ -122,34 +140,46 @@ class PrefixCache:
 
     def _lookup(self, kb, kl):
         if self._shard is not None:
+            # degraded lanes (report.degraded) serve from the last-barrier
+            # snapshot: possibly-stale hits beat refusing the request
             return self._shard.lookup_batch(self.tree, kb, kl,
-                                            engine=self.engine)
+                                            engine=self.engine,
+                                            faults=self.faults,
+                                            retry=self.retry)
         return B.lookup_batch(self.tree, kb, kl, engine=self.engine)
 
     def _insert(self, kb, kl, vals):
         if self._shard is not None:
-            self.tree, rep, _ = self._shard.insert_batch(
-                self.tree, kb, kl, vals, engine=self.engine)
+            tree, rep, _ = self._shard.insert_batch(
+                self.tree, kb, kl, vals, engine=self.engine,
+                faults=self.faults, retry=self.retry)
         else:
-            self.tree, rep, _ = B.insert_batch(self.tree, kb, kl, vals,
-                                               engine=self.engine)
+            tree, rep, _ = B.insert_batch(self.tree, kb, kl, vals,
+                                          engine=self.engine)
+        self.lifecycle.commit(tree)
         return rep
 
     def _remove(self, kb, kl):
         if self._shard is not None:
-            self.tree, rep = self._shard.remove_batch(self.tree, kb, kl,
-                                                      engine=self.engine)
+            tree, rep = self._shard.remove_batch(self.tree, kb, kl,
+                                                 engine=self.engine,
+                                                 faults=self.faults,
+                                                 retry=self.retry)
         else:
-            self.tree, rep = B.remove_batch(self.tree, kb, kl,
-                                            engine=self.engine)
+            tree, rep = B.remove_batch(self.tree, kb, kl,
+                                       engine=self.engine)
+        self.lifecycle.commit(tree)
         return rep
 
     def _scan(self, kb, kl, max_items):
         """-> (kid-or-gkid, val, emitted); kid resolution goes through
         :meth:`_kid_rows`."""
         if self._shard is not None:
-            kid, val, em, _ = self._shard.range_scan(
-                self.tree, kb, kl, max_items=max_items, engine=self.engine)
+            kid, val, em, _, failed = self._shard.range_scan(
+                self.tree, kb, kl, max_items=max_items, engine=self.engine,
+                faults=self.faults, retry=self.retry)
+            # a failed lane's emissions are a correct ascending prefix —
+            # the eviction sweep just sees fewer candidates this round
             return kid, val, em
         kid, val, em, _ = B.range_scan(self.tree, kb, kl,
                                        max_items=max_items,
@@ -219,7 +249,12 @@ class PrefixCache:
         # key_count to key_cap while the live set stays small — compact
         # before appending would overflow (DESIGN.md §5)
         if not self._key_headroom_ok(len(new)):
-            self.compact()
+            rep = self.compact()
+            if not rep.ok and not self._key_headroom_ok(len(new)):
+                # the barrier aborted (fault/fsck) and the old pool is
+                # still full: degrade to not admitting new blocks rather
+                # than crashing the serving loop on the append overflow
+                return None
         ids = self.pool.alloc(len(new))
         if ids is None:
             self._evict(len(new) * 2)
@@ -282,29 +317,30 @@ class PrefixCache:
             need = max(need, self.tree.n_shards)
         return self._leaf_count() / need
 
-    def compact(self):
-        """Online rebuild (DESIGN.md §5): drop eviction tombstones, re-pack
-        the key pool, and rebuild all levels device-side in one batch op.
-        Sharded mode runs the cross-shard form — ``repro.shard.rebalance``
-        (DESIGN.md §7) — which additionally re-balances the partition.
+    def compact(self) -> PublishReport:
+        """Online rebuild (DESIGN.md §5) as an atomic publish (§8): drop
+        eviction tombstones, re-pack the key pool, and rebuild all levels
+        device-side — **off to the side**. The staged tree is structurally
+        fsck'd and swapped in only on success; an abort, capacity error,
+        or corruption mid-barrier leaves the current tree serving,
+        bit-identical (the crash-unsafety regression test in
+        ``tests/test_serving.py`` pins this). Sharded mode runs the
+        cross-shard form — ``repro.shard.rebalance`` (DESIGN.md §7) —
+        which also re-balances the partition and re-admits downed shards.
 
-        A bulk-synchronous barrier between serving batches — cached page ids
-        (the tree *values*) survive, but key ids/leaf ids/versions from
-        before the barrier are invalidated, which is fine here: match()
-        re-traverses from scratch every batch. Returns the build/rebalance
-        report (both expose ``n_live`` and ``reclaimed``).
+        A bulk-synchronous barrier between serving batches — cached page
+        ids (the tree *values*) survive, but key ids/leaf ids/versions
+        from before the barrier are invalidated, which is fine here:
+        match() re-traverses from scratch every batch. Returns a
+        ``core.lifecycle.PublishReport``; on success ``rep.aux`` is the
+        build/rebalance report (both expose ``n_live``/``reclaimed``).
         """
         if self._shard is not None:
-            self.tree, rep = self._shard.rebalance(self.tree)
+            rep = self.lifecycle.rebalance(label="compact")
         else:
-            tree, rep = B.rebuild(self.tree)
-            if bool(rep.error):  # pragma: no cover - cfg.plan() sizes caps
-                # error=True arrays are garbage (DESIGN.md §5) — keep the
-                # old tree
-                raise RuntimeError(
-                    "prefix-cache rebuild exceeded tree capacity")
-            self.tree = tree
-        self.stats["rebuilds"] += 1
+            rep = self.lifecycle.rebuild(label="compact")
+        if rep.ok:
+            self.stats["rebuilds"] += 1
         return rep
 
     def hit_rate(self) -> float:

@@ -9,17 +9,17 @@ Stable public surface — import from here, not from the submodules:
 """
 from .build import sharded_build
 from .mesh import make_shard_mesh, shard_devices
-from .ops import (RebalanceReport, ShardOpReport, insert_batch,
-                  lookup_batch, range_scan, rebalance, remove_batch,
-                  update_batch)
+from .ops import (DEFAULT_RETRY, RebalanceReport, ShardOpReport,
+                  insert_batch, lookup_batch, range_scan, rebalance,
+                  remove_batch, update_batch)
 from .router import ShardRouter, make_router, route
-from .tree import ShardedTree
+from .tree import ShardedTree, ShardHealth
 
 __all__ = [
-    "ShardedTree", "sharded_build",
+    "ShardedTree", "ShardHealth", "sharded_build",
     "ShardRouter", "make_router", "route",
     "make_shard_mesh", "shard_devices",
     "lookup_batch", "update_batch", "insert_batch", "remove_batch",
     "range_scan", "rebalance",
-    "ShardOpReport", "RebalanceReport",
+    "ShardOpReport", "RebalanceReport", "DEFAULT_RETRY",
 ]

@@ -55,7 +55,26 @@ def sharded_build(ks: K.KeySet, vals, n_shards: int,
     * ``plan_kw``             forwarded to ``TreeConfig.plan`` (ns, fs,
       leaf_fill, val_dtype, stacked, ...).
     """
-    assert n_shards >= 1
+    if n_shards < 1:
+        raise ValueError(
+            f"sharded_build: n_shards must be >= 1, got {n_shards}")
+    if ks.n < n_shards:
+        raise ValueError(
+            f"sharded_build: need at least one key per shard to define "
+            f"the range partition (n={ks.n} < n_shards={n_shards}) — "
+            f"lower n_shards or seed per-shard sentinel keys the way "
+            f"serving.PrefixCache does")
+    nv = np.asarray(vals).shape[0]
+    if nv != ks.n:
+        raise ValueError(
+            f"sharded_build: {nv} values for {ks.n} keys — one value per "
+            f"key")
+    if cfg is not None and cfg.key_width != ks.width:
+        raise ValueError(
+            f"sharded_build: TreeConfig.key_width={cfg.key_width} but the "
+            f"key set is packed to width {ks.width} — plan the config "
+            f"with key_width={ks.width} (routing and descent compare "
+            f"fixed-width padded rows)")
     if cfg is None:
         if max_keys is None:
             max_keys = ks.n

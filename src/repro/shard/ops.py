@@ -21,6 +21,16 @@ successor) and the per-shard emissions — each ascending, each riding the
 globally ascending result. Filled lanes are parked on an all-0xFF start
 key so later shards do one trivial descent for them, and the host loop
 stops as soon as no lane is active.
+
+Fault tolerance (DESIGN.md §8): every launch goes through
+:func:`_dispatch`, which retries injected :class:`ShardDropped` faults
+with capped exponential backoff and marks a shard unhealthy
+(``ShardedTree.health``) when retries are exhausted. Unhealthy shards
+degrade instead of erroring: lookups serve their lanes from the
+last-barrier ``snapshots`` replica (``degraded`` mask — possibly stale),
+mutations and scans report those lanes ``failed`` (never silently
+dropped or truncated), and :func:`rebalance` is the recovery barrier that
+re-admits the shard with fresh health and snapshots.
 """
 from __future__ import annotations
 
@@ -32,6 +42,7 @@ import numpy as np
 
 from repro.core import batch_ops as B
 from repro.core import keys as K
+from repro.core.faults import FaultPlan, RetryPolicy, ShardDropped
 from repro.core.fbtree import EMPTY
 from repro.core.traverse import TraversalEngine
 
@@ -41,7 +52,9 @@ from .tree import ShardedTree
 
 __all__ = ["ShardOpReport", "RebalanceReport", "lookup_batch",
            "update_batch", "insert_batch", "remove_batch", "range_scan",
-           "rebalance"]
+           "rebalance", "DEFAULT_RETRY"]
+
+DEFAULT_RETRY = RetryPolicy()
 
 
 class ShardOpReport(NamedTuple):
@@ -52,6 +65,10 @@ class ShardOpReport(NamedTuple):
     error: np.ndarray       # bool — any shard hit a capacity error
     owner: np.ndarray       # int32 [B] — routed shard per query
     shards_hit: int         # shards that owned at least one lane
+    failed: np.ndarray = np.zeros(0, bool)    # bool [B] — lane not served
+    #                         (owner shard down; mutations: NOT committed)
+    degraded: np.ndarray = np.zeros(0, bool)  # bool [B] — lane served from
+    #                         the last-barrier snapshot (may be stale)
 
 
 class RebalanceReport(NamedTuple):
@@ -69,58 +86,134 @@ def _put(x, dev):
 def _owner_masks(st: ShardedTree, qb, ql):
     """Route once; per-shard owner masks as host bools."""
     qb = jnp.asarray(qb)
+    if qb.ndim != 2 or qb.shape[-1] != st.config.key_width:
+        got = "x".join(map(str, qb.shape))
+        raise ValueError(
+            f"query batch shape [{got}] does not match the tree's key "
+            f"width {st.config.key_width}: routing compares packed words, "
+            f"so keys must be zero-padded to exactly key_width bytes — "
+            f"build them with repro.core.keys.make_keyset(keys, "
+            f"max_key_len={st.config.key_width})")
     ql = jnp.asarray(ql)
     owner = np.asarray(route(st.router, qb, ql))
     return qb, ql, owner
 
 
+def _dispatch(st: ShardedTree, s: int, opname: str, call,
+              faults: Optional[FaultPlan], retry: Optional[RetryPolicy]):
+    """Launch one shard-local op through the fault layer.
+
+    Returns the op result, or None when the shard cannot be reached: the
+    site ``shard.dispatch.<opname>`` fires per attempt; ShardDropped is
+    retried with capped exponential backoff (transient flakes are
+    absorbed); exhausting retries marks the shard down in
+    ``st.health`` so later ops skip the launch outright. Any other
+    exception (capacity overflow etc.) propagates unchanged — faults
+    model reachability, not data errors.
+    """
+    if st.health is not None and not st.health.is_ok(s):
+        return None
+    pol = retry if retry is not None else DEFAULT_RETRY
+    delays = list(pol.delays()) + [None]        # None = no sleep after last
+    for attempt, delay in enumerate(delays):
+        try:
+            if faults is not None:
+                faults.fire(f"shard.dispatch.{opname}", shard=s,
+                            attempt=attempt)
+            return call()
+        except ShardDropped:
+            if delay is not None:
+                pol.sleep(delay)
+    if st.health is not None:
+        st.health.mark_down(
+            s, f"{opname}: unreachable after {len(delays)} attempts")
+    return None
+
+
 def lookup_batch(st: ShardedTree, qb, ql,
-                 engine: Optional[TraversalEngine] = None):
+                 engine: Optional[TraversalEngine] = None,
+                 faults: Optional[FaultPlan] = None,
+                 retry: Optional[RetryPolicy] = None):
     """Batched point lookup across shards. Returns ``(vals [B], report)``;
     ``vals``/``found`` are bit-identical to ``core.batch_ops.lookup_batch``
-    on one unsharded tree over the same keys."""
+    on one unsharded tree over the same keys.
+
+    Degradation: lanes owned by an unreachable shard are served from that
+    shard's last-barrier snapshot (``report.degraded`` — correct as of the
+    barrier, possibly stale) rather than failed; reads prefer staleness
+    over unavailability. ``report.failed`` stays all-False for lookups.
+    """
     qb, ql, owner = _owner_masks(st, qb, ql)
     Bn = qb.shape[0]
     vals = np.zeros((Bn,), dtype=np.asarray(
         jnp.zeros((), st.config.val_dtype)).dtype)
     found = np.zeros((Bn,), dtype=bool)
+    degraded = np.zeros((Bn,), dtype=bool)
     pending = []
     for s, t in enumerate(st.shards):
         sel = owner == s
         if not sel.any():
             continue
         dev = st.devices[s]
-        v, rep = B.lookup_batch(t, _put(qb, dev), _put(ql, dev),
-                                engine=engine)
+        res = _dispatch(
+            st, s, "lookup",
+            lambda: B.lookup_batch(t, _put(qb, dev), _put(ql, dev),
+                                   engine=engine),
+            faults, retry)
+        if res is None:
+            # degrade: the snapshot replica is reachable by construction
+            # (it lives with the router, not behind the downed dispatch)
+            snap = st.snapshots[s]
+            v, rep = B.lookup_batch(snap, qb, ql, engine=engine)
+            degraded |= sel
+        else:
+            v, rep = res
         pending.append((sel, v, rep.found))     # async: combine later
     for sel, v, f in pending:
         vals[sel] = np.asarray(v)[sel]
         found[sel] = np.asarray(f)[sel]
     rep = ShardOpReport(found=found, conflicts=np.int32(0),
                         splits=np.int32(0), error=np.bool_(False),
-                        owner=owner, shards_hit=len(pending))
+                        owner=owner, shards_hit=len(pending),
+                        failed=np.zeros((Bn,), bool), degraded=degraded)
     return vals, rep
 
 
-def _routed_mutation(st: ShardedTree, owner, run_one):
+def _routed_mutation(st: ShardedTree, owner, opname, run_one, faults,
+                     retry):
     """Shared mutation loop: run ``run_one(shard_tree, mask, dev)`` on every
-    shard owning lanes; returns (new shards, per-shard outcomes)."""
+    reachable shard owning lanes; returns (new shards, outcomes, failed).
+
+    Lanes of an unreachable shard are reported ``failed`` — the shard tree
+    is left untouched (the mutation is NOT committed there), so a caller
+    can re-apply exactly the failed lanes after recovery.
+    """
     shards = list(st.shards)
     outcomes = []
+    failed = np.zeros(owner.shape, dtype=bool)
     for s, t in enumerate(st.shards):
         sel = owner == s
         if not sel.any():
             continue
         dev = st.devices[s]
-        mask = _put(jnp.asarray(sel), dev)
-        t2, out = run_one(t, mask, dev)
+
+        def call(t=t, sel=sel, dev=dev):
+            mask = _put(jnp.asarray(sel), dev)
+            return run_one(t, mask, dev)
+        res = _dispatch(st, s, opname, call, faults, retry)
+        if res is None:
+            failed |= sel
+            continue
+        t2, out = res
         shards[s] = t2
         outcomes.append((sel, out))
-    return tuple(shards), outcomes
+    return tuple(shards), outcomes, failed
 
 
 def update_batch(st: ShardedTree, qb, ql, vals,
-                 engine: Optional[TraversalEngine] = None):
+                 engine: Optional[TraversalEngine] = None,
+                 faults: Optional[FaultPlan] = None,
+                 retry: Optional[RetryPolicy] = None):
     """Routed blind update. Returns ``(ShardedTree', report)``."""
     qb, ql, owner = _owner_masks(st, qb, ql)
     vals = jnp.asarray(vals)
@@ -129,12 +222,15 @@ def update_batch(st: ShardedTree, qb, ql, vals,
         t2, rep = B.update_batch(t, _put(qb, dev), _put(ql, dev),
                                  _put(vals, dev), engine=engine, mask=mask)
         return t2, rep
-    shards, outcomes = _routed_mutation(st, owner, run_one)
-    return st.replace(shards=shards), _combine(outcomes, owner)
+    shards, outcomes, failed = _routed_mutation(st, owner, "update",
+                                                run_one, faults, retry)
+    return st.replace(shards=shards), _combine(outcomes, owner, failed)
 
 
 def remove_batch(st: ShardedTree, qb, ql,
-                 engine: Optional[TraversalEngine] = None):
+                 engine: Optional[TraversalEngine] = None,
+                 faults: Optional[FaultPlan] = None,
+                 retry: Optional[RetryPolicy] = None):
     """Routed tombstone removal. Returns ``(ShardedTree', report)``."""
     qb, ql, owner = _owner_masks(st, qb, ql)
 
@@ -142,12 +238,15 @@ def remove_batch(st: ShardedTree, qb, ql,
         t2, rep = B.remove_batch(t, _put(qb, dev), _put(ql, dev),
                                  engine=engine, mask=mask)
         return t2, rep
-    shards, outcomes = _routed_mutation(st, owner, run_one)
-    return st.replace(shards=shards), _combine(outcomes, owner)
+    shards, outcomes, failed = _routed_mutation(st, owner, "remove",
+                                                run_one, faults, retry)
+    return st.replace(shards=shards), _combine(outcomes, owner, failed)
 
 
 def insert_batch(st: ShardedTree, qb, ql, vals,
-                 engine: Optional[TraversalEngine] = None, **kw):
+                 engine: Optional[TraversalEngine] = None,
+                 faults: Optional[FaultPlan] = None,
+                 retry: Optional[RetryPolicy] = None, **kw):
     """Routed upsert. Returns ``(ShardedTree', report, rounds)`` —
     ``rounds`` is the max split rounds any shard needed. New keys land in
     their owner shard only (range partition preserved); a per-shard
@@ -164,12 +263,13 @@ def insert_batch(st: ShardedTree, qb, ql, vals,
                                          mask=mask, **kw)
         rounds_max = max(rounds_max, rounds)
         return t2, rep
-    shards, outcomes = _routed_mutation(st, owner, run_one)
-    return (st.replace(shards=shards), _combine(outcomes, owner),
+    shards, outcomes, failed = _routed_mutation(st, owner, "insert",
+                                                run_one, faults, retry)
+    return (st.replace(shards=shards), _combine(outcomes, owner, failed),
             rounds_max)
 
 
-def _combine(outcomes, owner) -> ShardOpReport:
+def _combine(outcomes, owner, failed=None) -> ShardOpReport:
     found = np.zeros(owner.shape, dtype=bool)
     splits = 0
     error = False
@@ -182,9 +282,13 @@ def _combine(outcomes, owner) -> ShardOpReport:
             # per-shard ops dedupe the FULL batch before the mask ANDs in,
             # so any one report already carries the global conflict count
             conflicts = int(rep.conflicts)
+    if failed is None:
+        failed = np.zeros(owner.shape, dtype=bool)
     return ShardOpReport(found=found, conflicts=np.int32(conflicts),
                          splits=np.int32(splits), error=np.bool_(error),
-                         owner=owner, shards_hit=len(outcomes))
+                         owner=owner, shards_hit=len(outcomes),
+                         failed=failed,
+                         degraded=np.zeros(owner.shape, dtype=bool))
 
 
 # --------------------------------------------------------------------------
@@ -192,22 +296,37 @@ def _combine(outcomes, owner) -> ShardOpReport:
 # --------------------------------------------------------------------------
 
 def range_scan(st: ShardedTree, qb, ql, max_items: int = 64,
-               engine: Optional[TraversalEngine] = None):
+               engine: Optional[TraversalEngine] = None,
+               faults: Optional[FaultPlan] = None,
+               retry: Optional[RetryPolicy] = None):
     """Cross-shard range scan with spill-to-next-shard continuation.
 
     Returns ``(gkid int64 [B, max_items], val [B, max_items], emitted [B],
-    rearranged [B])`` — ascending per lane, starting at the first key >=
-    the query; ``gkid`` is the global key id (``ShardedTree.key_rows``
-    resolves it), EMPTY past ``emitted``. Values, emitted counts, and the
-    resolved key bytes are bit-identical to the unsharded §6 scan;
-    ``rearranged`` sums the dirty leaves visited across shards (leaf
-    chunking differs per partition, so it is *not* parity-comparable).
+    rearranged [B], failed bool [B])`` — ascending per lane, starting at
+    the first key >= the query; ``gkid`` is the global key id
+    (``ShardedTree.key_rows`` resolves it), EMPTY past ``emitted``.
+    Values, emitted counts, and the resolved key bytes are bit-identical
+    to the unsharded §6 scan; ``rearranged`` sums the dirty leaves visited
+    across shards (leaf chunking differs per partition, so it is *not*
+    parity-comparable).
 
     Each per-shard scan goes through the engine's §6 scan path (fused
     kernel or jnp chain walk) and keeps its lazy-rearrangement ordering
     guarantee; the merge is pure concatenation because the partition is by
     key range.
+
+    Degradation: a lane whose next needed shard is unreachable is marked
+    ``failed`` and stops there — its emissions so far are a correct
+    ascending *prefix* of the full result, and the flag says it may be
+    truncated. A result is never silently shortened: ``failed[i] is
+    False`` guarantees lane ``i`` is complete. Failed lanes take no items
+    from later shards (a contiguity gap would corrupt the ascending
+    merge); snapshots are not substituted here for the same reason.
     """
+    if max_items < 1:
+        raise ValueError(
+            f"range_scan: max_items must be >= 1, got {max_items} — each "
+            f"lane emits up to max_items (key, value) pairs")
     qb, ql, owner = _owner_masks(st, qb, ql)
     Bn = qb.shape[0]
     L = st.config.key_width
@@ -217,6 +336,7 @@ def range_scan(st: ShardedTree, qb, ql, max_items: int = 64,
     out_val = np.zeros((Bn, max_items), dtype=vdt)
     emitted = np.zeros((Bn,), dtype=np.int32)
     rearranged = np.zeros((Bn,), dtype=np.int32)
+    failed = np.zeros((Bn,), dtype=bool)
     park_b = np.full((L,), 0xFF, dtype=np.uint8)   # parked lanes descend to
     park_l = np.int32(L)                           # the last leaf, emit ~0
     qb_np = np.asarray(qb)
@@ -226,7 +346,7 @@ def range_scan(st: ShardedTree, qb, ql, max_items: int = 64,
                            (Bn, max_items))
 
     for s, t in enumerate(st.shards):
-        active = (owner <= s) & (emitted < max_items)
+        active = (owner <= s) & (emitted < max_items) & ~failed
         if not active.any():
             # stop only when NO lane can still gain: lanes owned by later
             # shards haven't started yet (owners are clustered, e.g. {0, 3})
@@ -236,9 +356,16 @@ def range_scan(st: ShardedTree, qb, ql, max_items: int = 64,
         sqb = np.where(active[:, None], qb_np, park_b[None, :])
         sql = np.where(active, ql_np, park_l).astype(np.int32)
         dev = st.devices[s]
-        kid_s, val_s, em_s, re_s = B.range_scan(
-            t, _put(jnp.asarray(sqb), dev), _put(jnp.asarray(sql), dev),
-            max_items=max_items, engine=engine)
+        res = _dispatch(
+            st, s, "range_scan",
+            lambda: B.range_scan(t, _put(jnp.asarray(sqb), dev),
+                                 _put(jnp.asarray(sql), dev),
+                                 max_items=max_items, engine=engine),
+            faults, retry)
+        if res is None:
+            failed |= active      # partial prefix, flagged — never silent
+            continue
+        kid_s, val_s, em_s, re_s = res
         kid_s = np.asarray(kid_s)
         val_s = np.asarray(val_s)
         em_s = np.asarray(em_s)
@@ -250,14 +377,15 @@ def range_scan(st: ShardedTree, qb, ql, max_items: int = 64,
         out_val[rows[ok], dst[ok]] = val_s[ok]
         emitted += take.astype(np.int32)
         rearranged += np.where(active, np.asarray(re_s), 0).astype(np.int32)
-    return out_kid, out_val, emitted, rearranged
+    return out_kid, out_val, emitted, rearranged, failed
 
 
 # --------------------------------------------------------------------------
 # rebalance — the skew-recovery barrier
 # --------------------------------------------------------------------------
 
-def rebalance(st: ShardedTree, device: bool = True
+def rebalance(st: ShardedTree, device: bool = True,
+              faults: Optional[FaultPlan] = None
               ) -> Tuple[ShardedTree, RebalanceReport]:
     """Re-partition the live key set evenly across shards.
 
@@ -274,11 +402,23 @@ def rebalance(st: ShardedTree, device: bool = True
     Same barrier semantics as ``rebuild``: key ids (global ones included)
     are not stable across it, versions reset, values carry over. With
     ``n_shards == 1`` this degenerates to exactly ``rebuild``.
+
+    This is also the **recovery barrier** (DESIGN.md §8): the snapshots
+    are gathered from the authoritative per-shard arrays — which survive a
+    dispatch outage intact — so every committed op is carried over, and
+    the fresh ShardedTree starts with all-healthy ``health`` and new
+    barrier ``snapshots``, re-admitting any shard that was marked down.
+    Run it inside ``core.lifecycle.TreeVersionManager.publish`` (or use
+    ``manager.rebalance()``) to make it abortable: a fault below — the
+    sites ``lifecycle.rebalance.gather``/``.build`` fire per step — then
+    leaves the old partition serving.
     """
     counts_before = tuple(int(t.n_keys_live) for t in st.shards)
     kbs, kls, vvs = [], [], []
     reclaimed = 0
-    for t in st.shards:
+    for s, t in enumerate(st.shards):
+        if faults is not None:
+            faults.fire("lifecycle.rebalance.gather", shard=s)
         kb, kl, _, vv, n_live = B.gather_live_sorted(t)
         n = int(n_live)
         reclaimed += int(t.arrays.key_count) - n
@@ -287,6 +427,8 @@ def rebalance(st: ShardedTree, device: bool = True
         vvs.append(np.asarray(vv)[:n])
     ks = K.KeySet(np.concatenate(kbs, axis=0), np.concatenate(kls, axis=0))
     vals = np.concatenate(vvs, axis=0)
+    if faults is not None:
+        faults.fire("lifecycle.rebalance.build")
     # the concatenation is already globally sorted (invariant above) —
     # presorted skips re-running step 1's lexsort at every barrier
     st2 = sharded_build(ks, vals, st.n_shards, cfg=st.config, device=device,

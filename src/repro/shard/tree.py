@@ -37,7 +37,50 @@ from repro.core.fbtree import EMPTY, FBTree, TreeConfig
 
 from .router import ShardRouter
 
-__all__ = ["ShardedTree"]
+__all__ = ["ShardedTree", "ShardHealth"]
+
+
+class ShardHealth:
+    """Mutable host-side health registry, shared across the functional
+    ``replace`` chain (DESIGN.md §8).
+
+    A shard is marked down when a routed dispatch exhausts its retries
+    (``shard.ops._dispatch``); while down, ops skip its launches outright
+    and report its lanes ``failed`` (mutations) or serve them ``degraded``
+    from the last-barrier snapshot (lookups). The shard's *arrays* are
+    always intact — only dispatch reachability is modeled — so
+    ``rebalance()`` (which builds a fresh ShardedTree with fresh health)
+    is the re-admission path and no committed op is ever lost.
+    """
+
+    def __init__(self, n_shards: int):
+        self.ok = np.ones(int(n_shards), dtype=bool)
+        self.reasons = [""] * int(n_shards)
+
+    def is_ok(self, s: int) -> bool:
+        return bool(self.ok[s])
+
+    def mark_down(self, s: int, reason: str = ""):
+        self.ok[s] = False
+        self.reasons[s] = reason
+
+    def mark_up(self, s: int):
+        self.ok[s] = True
+        self.reasons[s] = ""
+
+    def reset(self):
+        self.ok[:] = True
+        self.reasons = [""] * self.ok.shape[0]
+
+    @property
+    def n_unhealthy(self) -> int:
+        return int((~self.ok).sum())
+
+    def __repr__(self):
+        down = [f"{s}:{r or 'down'}" for s, r in enumerate(self.reasons)
+                if not self.ok[s]]
+        return (f"ShardHealth({self.ok.size} shards, "
+                f"{'all ok' if not down else 'down ' + ', '.join(down)})")
 
 
 @dataclasses.dataclass
@@ -47,6 +90,14 @@ class ShardedTree:
     Not a jax pytree — dispatch is a host loop launching one jitted op per
     shard (async on that shard's device); only the per-shard FBTrees and
     the router live on device.
+
+    ``health`` is deliberately a *shared mutable* object: routed ops
+    return a functionally-updated ShardedTree (``replace``), and a shard
+    marked down mid-batch must stay down in every tree object derived
+    from that lineage until a ``rebalance`` barrier re-admits it.
+    ``snapshots`` are the per-shard trees as of the last barrier
+    (build/rebalance) — the read-only fallback degraded lookups serve
+    from; in-place commits advance ``shards`` but never ``snapshots``.
     """
     shards: Tuple[FBTree, ...]
     router: ShardRouter
@@ -54,12 +105,30 @@ class ShardedTree:
     mesh: object = None            # jax.sharding.Mesh | None (documentation
     #                                + bench introspection; ops only use
     #                                `devices`)
+    health: ShardHealth = None     # shared across replace() lineage
+    snapshots: Tuple[FBTree, ...] = ()   # last-barrier per-shard trees
 
     def __post_init__(self):
         if not self.devices:
             self.devices = (None,) * len(self.shards)
-        assert len(self.devices) == len(self.shards)
-        assert self.router.n_shards == len(self.shards)
+        if self.health is None:
+            self.health = ShardHealth(len(self.shards))
+        if not self.snapshots:
+            self.snapshots = self.shards
+        if len(self.devices) != len(self.shards):
+            raise ValueError(
+                f"ShardedTree: {len(self.devices)} devices for "
+                f"{len(self.shards)} shards — one device slot per shard "
+                f"(None for unplaced)")
+        if self.router.n_shards != len(self.shards):
+            raise ValueError(
+                f"ShardedTree: router has {self.router.n_shards} split "
+                f"keys for {len(self.shards)} shards — rebuild the router "
+                f"with make_router over one min key per shard")
+        if self.health.ok.size != len(self.shards):
+            raise ValueError(
+                f"ShardedTree: health tracks {self.health.ok.size} shards "
+                f"but the tree has {len(self.shards)}")
 
     # ------------------------------------------------------------- shape
     @property
@@ -112,27 +181,27 @@ class ShardedTree:
     # ----------------------------------------------------- op delegation
     # thin method facade over repro.shard.ops (imported lazily to keep the
     # module graph acyclic); the functional API is the primary surface
-    def lookup(self, qb, ql, engine=None):
+    def lookup(self, qb, ql, engine=None, **kw):
         from . import ops
-        return ops.lookup_batch(self, qb, ql, engine=engine)
+        return ops.lookup_batch(self, qb, ql, engine=engine, **kw)
 
-    def update(self, qb, ql, vals, engine=None):
+    def update(self, qb, ql, vals, engine=None, **kw):
         from . import ops
-        return ops.update_batch(self, qb, ql, vals, engine=engine)
+        return ops.update_batch(self, qb, ql, vals, engine=engine, **kw)
 
     def insert(self, qb, ql, vals, engine=None, **kw):
         from . import ops
         return ops.insert_batch(self, qb, ql, vals, engine=engine, **kw)
 
-    def remove(self, qb, ql, engine=None):
+    def remove(self, qb, ql, engine=None, **kw):
         from . import ops
-        return ops.remove_batch(self, qb, ql, engine=engine)
+        return ops.remove_batch(self, qb, ql, engine=engine, **kw)
 
-    def range_scan(self, qb, ql, max_items: int = 64, engine=None):
+    def range_scan(self, qb, ql, max_items: int = 64, engine=None, **kw):
         from . import ops
         return ops.range_scan(self, qb, ql, max_items=max_items,
-                              engine=engine)
+                              engine=engine, **kw)
 
-    def rebalance(self, device: bool = True):
+    def rebalance(self, device: bool = True, **kw):
         from . import ops
-        return ops.rebalance(self, device=device)
+        return ops.rebalance(self, device=device, **kw)

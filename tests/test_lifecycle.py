@@ -1,0 +1,335 @@
+"""Versioned tree lifecycle + fault layer (DESIGN.md §8): fsck invariants
+on real trees, guaranteed-detectable corruptions, atomic abortable
+publishes, seeded replayable fault schedules, degraded-shard serving, and
+a mini chaos sweep through the same harness CI runs at scale.
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import batch_ops as B
+from repro.core import fsck
+from repro.core import keys as K
+from repro.core.faults import (CORRUPTIONS, FaultInjected, FaultPlan,
+                               FaultSpec, RetryPolicy, ShardDropped,
+                               corrupt_tree)
+from repro.core.fbtree import TreeConfig, bulk_build
+from repro.core.lifecycle import TreeVersionManager
+from repro import shard as SH
+
+W = 8
+FAST = RetryPolicy(max_attempts=2, sleep=lambda s: None)
+
+
+def _keyset(ints):
+    return K.make_keyset([int(x).to_bytes(W, "big") for x in ints], W)
+
+
+def _tree(n=160, seed=3, max_keys=1024):
+    rng = np.random.default_rng(seed)
+    base = np.sort(rng.choice(1 << 40, n, replace=False))
+    vals = np.arange(n, dtype=np.int32)
+    cfg = TreeConfig.plan(max_keys=max_keys, key_width=W)
+    return bulk_build(cfg, _keyset(base), vals), base, vals, cfg
+
+
+# ------------------------------------------------------------------ fsck
+
+def test_fsck_clean_through_op_lifecycle():
+    """check_tree passes on a fresh build and stays clean through inserts
+    (incl. leaf splits), removes, and a device rebuild — with version
+    monotonicity against the previous arrays at each step."""
+    t, base, vals, cfg = _tree()
+    assert fsck.check_tree(t), fsck.check_tree(t).violations
+    prev = t
+    new = [int(x) + 1 for x in base[:64]]        # force splits via density
+    t, _, _ = B.insert_batch(t, *(_keyset(new).bytes, _keyset(new).lens),
+                             np.arange(64, dtype=np.int32))
+    r = fsck.check_tree(t, prev=prev)
+    assert r.ok, r.violations
+    prev = t
+    q = _keyset([int(x) for x in base[10:40]])
+    t, _ = B.remove_batch(t, q.bytes, q.lens)
+    r = fsck.check_tree(t, prev=prev)
+    assert r.ok, r.violations
+    t2, rep = B.rebuild(t)
+    r = fsck.check_tree(t2)
+    assert r.ok and r.n_live == int(rep.n_live)
+    # empty tree: remove everything, rebuild, still structurally valid
+    live_b, live_l, *_ = B.gather_live_sorted(t)
+    n_live = int(t.n_keys_live)
+    t3, _ = B.remove_batch(t, np.asarray(live_b)[:n_live],
+                           np.asarray(live_l)[:n_live])
+    t4, _ = B.rebuild(t3)
+    assert fsck.check_tree(t4).ok and t4.n_keys_live == 0
+
+
+def test_fsck_version_regression_detected():
+    """A published version whose leaf versions went backwards vs the
+    previous arrays violates §4.2 ordering and must be flagged."""
+    t, *_ = _tree(n=80)
+    q = _keyset([int(x) for x in range(5)])
+    t2, _, _ = B.insert_batch(t, q.bytes, q.lens,
+                              np.arange(5, dtype=np.int32))
+    assert fsck.check_tree(t2, prev=t).ok
+    r = fsck.check_tree(t, prev=t2)      # swapped: versions regress
+    assert not r.ok
+    assert any("version" in v for v in r.violations), r.violations
+
+
+@pytest.mark.parametrize("kind", CORRUPTIONS)
+def test_fsck_detects_every_corruption(kind):
+    """Each corruption in the chaos vocabulary is fsck-detectable — the
+    guarantee that makes a corrupt-then-publish schedule safe to run."""
+    t, *_ = _tree()
+    t2, applied = corrupt_tree(t, random.Random(7), kind=kind)
+    assert applied == kind
+    r = fsck.check_tree(t2)
+    assert not r.ok, f"{kind} went undetected"
+
+
+def test_fsck_sharded_ownership():
+    """check_sharded: per-shard structure plus router ownership — a key
+    living in the wrong shard is a violation even if both shards are
+    individually well-formed."""
+    rng = np.random.default_rng(5)
+    base = np.sort(rng.choice(1 << 40, 120, replace=False))
+    st = SH.sharded_build(_keyset(base), np.arange(120, dtype=np.int32), 3,
+                          max_keys=1024)
+    assert fsck.check_sharded(st).ok
+    # move shard 2's tree into shard 1's slot: shard 1 now holds keys the
+    # router says belong to shard 2
+    shards = list(st.shards)
+    shards[1] = shards[2]
+    bad = st.replace(shards=tuple(shards))
+    r = fsck.check_sharded(bad)
+    assert not r.ok
+    assert any("route to a different shard" in v for v in r.violations)
+
+
+# ------------------------------------------------------- lifecycle publish
+
+def test_publish_success_and_abort_atomicity():
+    """rebuild() as an atomic publish: success bumps the version and keeps
+    the old one as rollback; an injected abort at any lifecycle step leaves
+    the current version serving bit-identically."""
+    t, base, vals, _ = _tree()
+    q = _keyset([int(x) for x in base[:32]])
+    t, _ = B.remove_batch(t, q.bytes, q.lens)    # give rebuild work
+    mgr = TreeVersionManager(t)
+    rep = mgr.rebuild()
+    assert rep.ok and mgr.version == 1 and rep.version == 1
+    assert mgr.previous is t                     # rollback version kept
+    assert int(rep.aux.reclaimed) == 32
+
+    for site in ("lifecycle.begin", "lifecycle.rebuild.gather",
+                 "lifecycle.rebuild.build", "lifecycle.fsck",
+                 "lifecycle.swap"):
+        plan = FaultPlan((FaultSpec(site, "abort"),))
+        mgr2 = TreeVersionManager(mgr.current, faults=plan)
+        before = mgr2.current
+        rep = mgr2.rebuild()
+        assert not rep.ok and rep.reason == f"fault:{site}", (site, rep)
+        assert mgr2.current is before and mgr2.version == 0, site
+        v, lrep = B.lookup_batch(mgr2.current, q.bytes, q.lens)
+        assert not np.asarray(lrep.found).any()  # removed keys stay gone
+
+
+def test_publish_fsck_gate_blocks_corrupt_staged():
+    """A staged tree corrupted between build and swap must be rejected by
+    the fsck gate — the bad version is never published."""
+    t, *_ = _tree()
+    plan = FaultPlan((FaultSpec("lifecycle.staged", "corrupt"),),
+                     seed=11)
+    mgr = TreeVersionManager(t, faults=plan)
+    rep = mgr.rebuild()
+    assert not rep.ok and rep.reason.startswith("fsck:"), rep.reason
+    assert rep.violations and mgr.version == 0 and mgr.current is t
+    assert any(k.startswith("corrupt:") for _, k, _ in plan.events)
+    # the serving tree itself is still clean
+    assert fsck.check_tree(mgr.current).ok
+    plan.disarm()
+    assert mgr.rebuild().ok and mgr.version == 1
+
+
+def test_fault_plan_replay_and_spec_windows():
+    """Determinism contract: the same seed replays the same schedule; a
+    FaultSpec nth/count window fires on exactly its visits."""
+    def drive(plan):
+        for i in range(6):
+            try:
+                plan.fire("lifecycle.step", shard=None)
+            except FaultInjected:
+                pass
+            try:
+                plan.fire("shard.dispatch.lookup", shard=i % 2)
+            except FaultInjected:
+                pass
+        return list(plan.events)
+    p = {"abort": 0.5, "drop_shard": 0.5}
+    e1 = drive(FaultPlan(seed=42, p=p))
+    e2 = drive(FaultPlan(seed=42, p=p))
+    e3 = drive(FaultPlan(seed=43, p=p))
+    assert e1 == e2 and e1 and e1 != e3
+    # nth/count: skip the first visit, fire the next two, then stop —
+    # tracked per (spec, shard)
+    spec = FaultSpec("shard.dispatch.*", "drop_shard", nth=1, count=2)
+    plan = FaultPlan((spec,))
+    fired = []
+    for visit in range(5):
+        try:
+            plan.fire("shard.dispatch.update", shard=0)
+            fired.append(False)
+        except ShardDropped:
+            fired.append(True)
+    assert fired == [False, True, True, False, False]
+
+
+# --------------------------------------------------- degraded-shard serving
+
+def _sharded(n=200, n_shards=4, seed=1):
+    rng = np.random.default_rng(seed)
+    base = np.sort(rng.choice(1 << 40, n, replace=False))
+    vals = np.arange(n, dtype=np.int32)
+    st = SH.sharded_build(_keyset(base), vals, n_shards, max_keys=1024)
+    return st, base, vals
+
+
+def test_transient_drop_absorbed_by_retry():
+    """A one-attempt flake (nth=0, count=1) is retried and served live —
+    no degraded lanes, shard stays healthy."""
+    st, base, vals = _sharded()
+    plan = FaultPlan((FaultSpec("shard.dispatch.lookup", "drop_shard",
+                                shard=1, count=1),))
+    q = _keyset([int(x) for x in base[::4]])
+    v, rep = SH.lookup_batch(st, q.bytes, q.lens, faults=plan, retry=FAST)
+    assert np.asarray(rep.found).all()
+    assert (np.asarray(v) == vals[::4]).all()
+    assert not np.asarray(rep.degraded).any()
+    assert st.health.is_ok(1)
+    assert ("shard.dispatch.lookup", "drop_shard", 1) in plan.events
+
+
+def test_down_shard_degrades_and_recovers():
+    """Retry exhaustion on a persistently down shard: lookups serve the
+    last-barrier snapshot (degraded, stale-but-true), mutations flag
+    exactly the down lanes failed (never partially applied), and the
+    rebalance barrier is the recovery path — no committed op lost."""
+    st, base, vals = _sharded()
+    plan = FaultPlan((FaultSpec("shard.dispatch.*", "drop_shard",
+                                shard=2),))
+    q = _keyset([int(x) for x in base[::4]])
+    idx = np.arange(0, 200, 4)
+
+    v, rep = SH.lookup_batch(st, q.bytes, q.lens, faults=plan, retry=FAST)
+    down = rep.owner == 2
+    assert down.any() and (rep.degraded == down).all()
+    assert np.asarray(rep.found).all()           # snapshot still has them
+    assert (np.asarray(v) == vals[idx]).all()
+    assert not st.health.is_ok(2)                # marked after exhaustion
+
+    newv = (vals[idx] + 1000).astype(np.int32)
+    st2, urep = SH.update_batch(st, q.bytes, q.lens, newv,
+                                faults=plan, retry=FAST)
+    assert (urep.failed == down).all()
+    v2, lrep = SH.lookup_batch(st2, q.bytes, q.lens, faults=plan,
+                               retry=FAST)
+    assert (v2[~down] == newv[~down]).all()      # committed lanes visible
+    assert (v2[down] == vals[idx][down]).all()   # stale snapshot, not junk
+    assert fsck.check_sharded(st2).ok            # arrays never corrupted
+
+    plan.heal()
+    plan.disarm()
+    st2.health.reset()
+    st3, _ = SH.rebalance(st2)
+    assert st3.health.n_unhealthy == 0
+    assert fsck.check_sharded(st3).ok
+    v3, rep3 = SH.lookup_batch(st3, q.bytes, q.lens)
+    assert np.asarray(rep3.found).all()
+    assert (np.asarray(v3)[~down] == newv[~down]).all()
+    assert (np.asarray(v3)[down] == vals[idx][down]).all()
+
+
+def test_manager_rebalance_recovery_barrier():
+    """TreeVersionManager.rebalance over a ShardedTree: a publish that
+    aborts mid-gather changes nothing; the clean retry bumps the version
+    and serves identically."""
+    st, base, vals = _sharded(n_shards=3)
+    plan = FaultPlan((FaultSpec("lifecycle.rebalance.gather", "abort",
+                                shard=1),))
+    mgr = TreeVersionManager(st, faults=plan)
+    rep = mgr.rebalance()
+    assert not rep.ok and rep.reason == "fault:lifecycle.rebalance.gather"
+    assert mgr.version == 0 and mgr.current is st
+    plan.disarm()
+    rep = mgr.rebalance()
+    assert rep.ok and mgr.version == 1
+    q = _keyset([int(x) for x in base])
+    v, lrep = SH.lookup_batch(mgr.current, q.bytes, q.lens)
+    assert np.asarray(lrep.found).all()
+    assert (np.asarray(v) == vals).all()
+
+
+# ------------------------------------------------------- input validation
+
+def test_tree_config_validation_messages():
+    with pytest.raises(ValueError, match="key_width must be >= 1"):
+        TreeConfig(key_width=0)
+    with pytest.raises(ValueError, match="ns must be >= 2"):
+        TreeConfig(key_width=8, ns=1)
+    with pytest.raises(ValueError, match="leaf_fill must be in"):
+        TreeConfig(key_width=8, ns=16, leaf_fill=17)
+    with pytest.raises(ValueError, match="one cap per inner level"):
+        TreeConfig(key_width=8, n_levels=2, level_caps=(1, 2, 3))
+
+
+def test_sharded_build_validation_messages():
+    ks = _keyset([1, 2, 3])
+    vals = np.arange(3, dtype=np.int32)
+    with pytest.raises(ValueError, match="n_shards must be >= 1"):
+        SH.sharded_build(ks, vals, 0)
+    with pytest.raises(ValueError, match="sentinel keys"):
+        SH.sharded_build(ks, vals, 8)
+    with pytest.raises(ValueError, match="one value per"):
+        SH.sharded_build(ks, vals[:2], 2)
+    cfg = TreeConfig.plan(max_keys=64, key_width=16)
+    with pytest.raises(ValueError, match="key_width"):
+        SH.sharded_build(ks, vals, 2, cfg=cfg)
+
+
+def test_range_scan_validates_max_items():
+    t, base, *_ = _tree(n=40)
+    q = _keyset([int(base[0])])
+    with pytest.raises(ValueError, match="max_items"):
+        B.range_scan(t, q.bytes, q.lens, max_items=0)
+    st, base, _ = _sharded(n=40, n_shards=2)
+    with pytest.raises(ValueError, match="max_items"):
+        SH.range_scan(st, q.bytes, q.lens, max_items=0)
+
+
+def test_sharded_tree_wiring_validation():
+    """ShardedTree construction rejects mismatched router/devices/health
+    sizes with actionable errors instead of asserts."""
+    st, *_ = _sharded(n=40, n_shards=2)
+    with pytest.raises(ValueError, match="per shard"):
+        st.replace(shards=st.shards[:1])
+    with pytest.raises(ValueError, match="health"):
+        st.replace(health=SH.ShardHealth(3))
+
+
+# ------------------------------------------------------------- mini chaos
+
+@pytest.mark.parametrize("scenario", ("rebuild", "rebalance", "compact",
+                                      "lookup"))
+def test_mini_chaos_schedules(scenario):
+    """A slice of the CI chaos sweep (tools/chaos_sweep.py) runs in-tree:
+    every seeded schedule must end fsck-clean with no committed op lost.
+    run_schedule raises on any violation."""
+    from tools.chaos_sweep import run_schedule
+    fired = 0
+    for seed in range(2):
+        for n_shards in (1, 4):
+            r = run_schedule(seed, n_shards, scenario)
+            fired += r["events"]
+    assert fired > 0, "no faults fired — schedules proved nothing"

@@ -68,10 +68,11 @@ def test_prefix_cache_compaction(rng):
     assert pc.publish(kept, 0) is not None
     leaves_before = int(pc.tree.arrays.leaf_count)
     live_before = pc.tree.n_keys_live
-    rep = pc.compact()
+    rep = pc.compact()                   # -> lifecycle PublishReport
+    assert rep.ok and rep.version == 1
     assert pc.stats["rebuilds"] == 1
-    assert int(rep.n_live) == live_before
-    assert int(rep.reclaimed) > 0        # tombstoned digests dropped
+    assert int(rep.aux.n_live) == live_before
+    assert int(rep.aux.reclaimed) > 0    # tombstoned digests dropped
     assert int(pc.tree.arrays.leaf_count) <= leaves_before
     hit, pages = pc.match([kept])        # cached pages survive the barrier
     assert hit == [len(kept) // 8]
@@ -92,6 +93,44 @@ def test_prefix_cache_pool_headroom_compaction(rng):
         assert pc.publish(toks, hit[0]) is not None
     assert pc.stats["rebuilds"] >= 1
     assert int(pc.tree.arrays.key_count) <= 256
+
+
+def test_prefix_cache_compact_abort_keeps_serving(rng):
+    """Crash-safety regression (DESIGN.md §8): compact() used to rebuild
+    in place — an abort mid-rebuild could leave the cache serving a
+    half-built tree. Now it is an atomic publish: the fault fails the
+    barrier, the old version keeps serving bit-identically, and a later
+    fault-free compact succeeds."""
+    from repro.core.faults import FaultPlan, FaultSpec
+    plan = FaultPlan((FaultSpec("lifecycle.rebuild.build", "abort"),))
+    plan.disarm()
+    pc = PrefixCache(n_pages=64, block_tokens=8, max_keys=4096,
+                     compact_factor=0, faults=plan)
+    for _ in range(8):                   # churn to give compact real work
+        toks = rng.integers(500, 1000, size=64).astype(np.int32)
+        hit, _ = pc.match([toks])
+        pc.publish(toks, hit[0])
+    kept = rng.integers(0, 500, size=64).astype(np.int32)
+    assert pc.publish(kept, 0) is not None
+    ref_hits, ref_pages = pc.match([kept])
+    live = pc.tree.n_keys_live
+    kc = int(pc.tree.arrays.key_count)
+
+    plan.arm()
+    rep = pc.compact()                   # the barrier dies mid-build
+    assert not rep.ok and rep.reason == "fault:lifecycle.rebuild.build"
+    assert pc.lifecycle.version == 0     # nothing published
+    assert pc.stats["rebuilds"] == 0
+    # serving is bit-identical to before the failed barrier
+    assert pc.tree.n_keys_live == live
+    assert int(pc.tree.arrays.key_count) == kc
+    assert pc.match([kept]) == (ref_hits, ref_pages)
+
+    plan.disarm()
+    rep = pc.compact()                   # recovery: clean publish
+    assert rep.ok and pc.lifecycle.version == 1
+    assert int(pc.tree.arrays.key_count) < kc     # tombstones reclaimed
+    assert pc.match([kept]) == (ref_hits, ref_pages)
 
 
 def test_engine_end_to_end_prefix_reuse(rng):

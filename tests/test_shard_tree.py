@@ -69,8 +69,10 @@ def _assert_scan_parity(ref, stree, qb, ql, max_items, engine, ctx):
     k_ref, v_ref, em_ref, _ = B.range_scan(ref, qb, ql,
                                            max_items=max_items,
                                            engine=engine)
-    gk, v_sh, em_sh, _ = S.range_scan(stree, qb, ql, max_items=max_items,
-                                      engine=engine)
+    gk, v_sh, em_sh, _, failed = S.range_scan(stree, qb, ql,
+                                              max_items=max_items,
+                                              engine=engine)
+    assert not failed.any(), ctx        # fault-free scans never degrade
     assert (np.asarray(em_ref) == em_sh).all(), ctx
     assert (np.asarray(v_ref) == v_sh).all(), ctx
     # key ids are pool-local — parity is on the resolved key bytes
@@ -197,7 +199,7 @@ def test_sharded_partition_invariants():
     parts2, split2 = sharded_partition(sks, vals[order], 3, presorted=True)
     for (p, pv), (p2, pv2) in zip(parts, parts2):
         assert (p.bytes == p2.bytes).all() and (pv == pv2).all()
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="at least one key per shard"):
         sharded_partition(K.make_keyset(keys[:2], 8), vals[:2], 3)
 
 
@@ -288,9 +290,53 @@ def test_scan_spills_across_shards():
     _assert_scan_parity(ref, st, sks.bytes, sks.lens, M,
                         TraversalEngine("jnp"), "boundary spill")
     # drain-to-end: max_items beyond the whole key set stops at the last key
-    gk, v, em, _ = S.range_scan(st, sks.bytes[-1:], sks.lens[-1:],
-                                max_items=512)
+    gk, v, em, _, _ = S.range_scan(st, sks.bytes[-1:], sks.lens[-1:],
+                                   max_items=512)
     assert int(em[0]) == len(keys)
+
+
+def test_scan_spill_into_unhealthy_shard():
+    """Degraded-serving contract (DESIGN.md §8): a scan lane that must
+    continue into an unhealthy shard is flagged ``failed`` with a
+    prefix-correct emission — never a silently truncated 'complete'
+    result and never a stale-snapshot splice (contiguity would lie)."""
+    from repro.core.faults import FaultPlan, FaultSpec, RetryPolicy
+    keys = list(range(0, 1200, 3))
+    ks = K.make_keyset(keys, 8)
+    vals = np.arange(len(keys), dtype=np.int32)
+    cfg = TreeConfig.plan(max_keys=1600, key_width=8)
+    st = S.sharded_build(ks, vals, 4, cfg=cfg)
+    fast = RetryPolicy(max_attempts=2, sleep=lambda s: None)
+    plan = FaultPlan((FaultSpec("shard.dispatch.range_scan",
+                                "drop_shard", shard=1),))
+    # lane 0 starts just below the shard-1 boundary (must spill into the
+    # dropped shard); lane 1 lives entirely inside healthy shard 3
+    b1 = np.asarray(st.router.split_bytes)[1]
+    # 7 below the boundary: two shard-0 keys (stride 3) precede the spill
+    start0 = int(K.decode_uint64(b1[None, :8].astype(np.uint8))[0]) - 7
+    start3 = int(K.decode_uint64(np.asarray(
+        st.router.split_bytes)[3][None, :8].astype(np.uint8))[0])
+    sks = K.make_keyset([start0, start3], 8)
+    M = 40  # > shard-0 tail for lane 0, < shard-3 size for lane 1
+    gk, v, em, _, failed = S.range_scan(st, sks.bytes, sks.lens,
+                                        max_items=M, faults=plan,
+                                        retry=fast)
+    assert failed.tolist() == [True, False]
+    assert st.health.is_ok(1) is False     # retries exhausted -> marked
+    # lane 0's emissions are exactly the healthy prefix (shard 0's tail),
+    # bit-identical to the fault-free scan up to that point
+    gk2, v2, em2, _, f2 = S.range_scan(
+        S.sharded_build(ks, vals, 4, cfg=cfg), sks.bytes, sks.lens,
+        max_items=M)
+    assert not f2.any() and int(em2[0]) == M
+    n0 = int(em[0])
+    assert 0 < n0 < M, n0                  # partial, and visibly so
+    assert (gk[0, :n0] == gk2[0, :n0]).all()
+    assert (v[0, :n0] == v2[0, :n0]).all()
+    assert (gk[0, n0:] == EMPTY).all()     # no phantom tail
+    # the healthy lane is untouched by the other lane's failure
+    assert int(em[1]) == int(em2[1])
+    assert (gk[1] == gk2[1]).all() and (v[1] == v2[1]).all()
 
 
 def test_scan_clustered_owners():
@@ -373,7 +419,7 @@ ref = bulk_build(cfg, ks, vals)
 v_ref, _ = B.lookup_batch(ref, ks.bytes, ks.lens)
 v_sh, rep = S.lookup_batch(st, ks.bytes, ks.lens)
 assert rep.found.all() and (np.asarray(v_ref) == v_sh).all()
-gk, v, em, _ = S.range_scan(st, ks.bytes[:4], ks.lens[:4], max_items=64)
+gk, v, em, _, _ = S.range_scan(st, ks.bytes[:4], ks.lens[:4], max_items=64)
 kr, vr, er, _ = B.range_scan(ref, ks.bytes[:4], ks.lens[:4], max_items=64)
 assert (np.asarray(er) == em).all() and (np.asarray(vr) == v).all()
 print("OK")
