@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import argparse
 import csv
+import json
 import os
 import sys
 import time
@@ -111,6 +112,7 @@ def main(argv=None):
     names = only.split(",") if only else list(SUITES)
     os.makedirs(args.out, exist_ok=True)
     failed = []
+    report = []     # per-suite timing/status -> out/bench_report.json
     for name in names:
         title, fn, cols = SUITES[name]
         eng = (dict(backend=args.backend, layout=args.layout)
@@ -126,8 +128,16 @@ def main(argv=None):
             import traceback
             traceback.print_exc()
             failed.append(name)
+            report.append({"suite": name, "case": title,
+                           "wall_s": round(time.time() - t0, 3),
+                           "status": "failed", "rows": 0})
             continue
         dt = time.time() - t0
+        # the parity-gated suites assert inside fn(), so reaching here
+        # means their backend A/B checks passed
+        report.append({"suite": name, "case": title,
+                       "wall_s": round(dt, 3), "status": "ok",
+                       "rows": len(rows)})
         print(f"\n== {title}  [{name}, {dt:.1f}s]")
         print(fmt_table(rows, cols))
         with open(os.path.join(args.out, f"{name}.csv"), "w",
@@ -148,7 +158,13 @@ def main(argv=None):
         elif name == "shard":
             print("shard rows written to",
                   traverse_bench.write_json(shard_rows=rows))
+    rpt_path = os.path.join(args.out, "..", "bench_report.json")
+    rpt_path = os.path.normpath(rpt_path)
+    with open(rpt_path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
     print("\nCSV written to", args.out)
+    print("suite report written to", rpt_path)
     if failed:
         raise SystemExit(f"suites failed: {', '.join(failed)}")
 

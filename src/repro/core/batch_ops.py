@@ -25,6 +25,8 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
+
 from .branch import BranchStats
 from .fbtree import (BIG, EMPTY, FBTree, Level, TreeArrays,
                      _device_build_from_sorted, chunk_of_pos, chunk_start,
@@ -174,17 +176,34 @@ def _seg_head_rank(sorted_ids: jnp.ndarray):
 # --------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("sibling_check", "engine"))
-def lookup_batch(tree: FBTree, qb, ql, sibling_check: bool = True,
-                 engine: Optional[TraversalEngine] = None):
-    """Batched point lookup. Returns (vals [B], report)."""
+def _lookup_batch_jit(tree: FBTree, qb, ql, sibling_check: bool = True,
+                      engine: Optional[TraversalEngine] = None):
     _, _, found, slot, val, bstats, lstats = _traverse_probe(
         tree, qb, ql, engine, sibling_check)
     return val, _report(found, bstats, lstats)
 
 
+def lookup_batch(tree: FBTree, qb, ql, sibling_check: bool = True,
+                 engine: Optional[TraversalEngine] = None):
+    """Batched point lookup. Returns (vals [B], report).
+
+    Telemetry (DESIGN.md §9): with ``repro.obs`` enabled, the launch runs
+    under a host span (latency histogram ``span.op.lookup``) and the
+    report's device counters drain into the registry — one host sync per
+    batch. With it off (the default) this is the bare jitted call; the
+    traced program is identical either way.
+    """
+    if not obs.enabled():
+        return _lookup_batch_jit(tree, qb, ql, sibling_check, engine)
+    with obs.span("op.lookup"):
+        val, rep = _lookup_batch_jit(tree, qb, ql, sibling_check, engine)
+        obs.drain_op_report("lookup", rep)
+    return val, rep
+
+
 @functools.partial(jax.jit, static_argnames=("engine",))
-def update_batch(tree: FBTree, qb, ql, vals,
-                 engine: Optional[TraversalEngine] = None, mask=None):
+def _update_batch_jit(tree: FBTree, qb, ql, vals,
+                      engine: Optional[TraversalEngine] = None, mask=None):
     """Blind value update for existing keys (latch-free CAS analogue).
 
     Does NOT bump leaf versions (§4.2 — readers never restart on updates).
@@ -209,9 +228,21 @@ def update_batch(tree: FBTree, qb, ql, vals,
                                               conflicts=conflicts)
 
 
-@functools.partial(jax.jit, static_argnames=("engine",))
-def remove_batch(tree: FBTree, qb, ql,
+def update_batch(tree: FBTree, qb, ql, vals,
                  engine: Optional[TraversalEngine] = None, mask=None):
+    """Instrumented wrapper over the jitted blind update (see the jit
+    body's docstring; same obs contract as :func:`lookup_batch`)."""
+    if not obs.enabled():
+        return _update_batch_jit(tree, qb, ql, vals, engine, mask)
+    with obs.span("op.update"):
+        tree2, rep = _update_batch_jit(tree, qb, ql, vals, engine, mask)
+        obs.drain_op_report("update", rep)
+    return tree2, rep
+
+
+@functools.partial(jax.jit, static_argnames=("engine",))
+def _remove_batch_jit(tree: FBTree, qb, ql,
+                      engine: Optional[TraversalEngine] = None, mask=None):
     """Tombstone removal (slot cleared, version bumped). ``mask`` gates
     writes exactly as in :func:`update_batch` (routed-op hook)."""
     B = qb.shape[0]
@@ -230,6 +261,18 @@ def remove_batch(tree: FBTree, qb, ql,
     ver = a.leaf_version.at[li].add(do.astype(jnp.int32))
     return (tree.replace(leaf_occ=occ, leaf_keyid=kid, leaf_version=ver),
             _report(found, bstats, lstats, conflicts=conflicts))
+
+
+def remove_batch(tree: FBTree, qb, ql,
+                 engine: Optional[TraversalEngine] = None, mask=None):
+    """Instrumented wrapper over the jitted tombstone removal (same obs
+    contract as :func:`lookup_batch`)."""
+    if not obs.enabled():
+        return _remove_batch_jit(tree, qb, ql, engine, mask)
+    with obs.span("op.remove"):
+        tree2, rep = _remove_batch_jit(tree, qb, ql, engine, mask)
+        obs.drain_op_report("remove", rep)
+    return tree2, rep
 
 
 # --------------------------------------------------------------------------
@@ -596,7 +639,24 @@ def insert_batch(tree: FBTree, qb, ql, vals, max_ov: int = 128,
     workloads funnel a whole batch into the rightmost leaf). ``mask``
     (bool [B], optional) is the routed-op hook: masked-out lanes are
     no-ops — no in-place update, no pool append, never pending.
+
+    Telemetry: same obs contract as :func:`lookup_batch`, plus an
+    ``op.rounds`` counter (split rounds taken, labeled ``op=insert``).
     """
+    if not obs.enabled():
+        return _insert_batch_impl(tree, qb, ql, vals, max_ov, ins_cap,
+                                  max_rounds, engine, mask)
+    with obs.span("op.insert"):
+        tree2, rep, rounds = _insert_batch_impl(
+            tree, qb, ql, vals, max_ov, ins_cap, max_rounds, engine, mask)
+        obs.drain_op_report("insert", rep)
+        obs.counter("op.rounds", op="insert").inc(rounds)
+    return tree2, rep, rounds
+
+
+def _insert_batch_impl(tree: FBTree, qb, ql, vals, max_ov: int = 128,
+                       ins_cap: int = None, max_rounds: int = 64,
+                       engine: Optional[TraversalEngine] = None, mask=None):
     qb = jnp.asarray(qb)
     ql = jnp.asarray(ql)
     vals = jnp.asarray(vals)
@@ -766,6 +826,16 @@ def _range_scan_jnp(tree: FBTree, qb, ql, max_items: int,
 
 
 @functools.partial(jax.jit, static_argnames=("max_items", "engine"))
+def _range_scan_jit(tree: FBTree, qb, ql, max_items: int = 64,
+                    engine: Optional[TraversalEngine] = None):
+    eng = resolve_engine(engine)
+    fused = eng.scan_path()
+    if fused is not None:
+        return fused(tree, qb, ql, max_items=max_items,
+                     collect_stats=eng.collect_stats)
+    return _range_scan_jnp(tree, qb, ql, max_items, eng)
+
+
 def range_scan(tree: FBTree, qb, ql, max_items: int = 64,
                engine: Optional[TraversalEngine] = None):
     """Batched range scan: for each start key return up to ``max_items``
@@ -781,17 +851,26 @@ def range_scan(tree: FBTree, qb, ql, max_items: int = 64,
     Returns ``(out_kid [B, max_items], out_val [B, max_items], emitted [B],
     rearranged [B])``; ``rearranged`` (dirty leaves visited) is all-zero
     under a stats-free engine.
+
+    Telemetry: same obs contract as :func:`lookup_batch` — the span
+    histogram is ``span.op.scan``, and ``op.emitted``/``op.rearranged``
+    counters drain from the scan outputs (one host sync).
     """
     if max_items < 1:
         raise ValueError(
             f"range_scan: max_items must be >= 1, got {max_items} — each "
             f"lane emits up to max_items (key, value) pairs")
-    eng = resolve_engine(engine)
-    fused = eng.scan_path()
-    if fused is not None:
-        return fused(tree, qb, ql, max_items=max_items,
-                     collect_stats=eng.collect_stats)
-    return _range_scan_jnp(tree, qb, ql, max_items, eng)
+    if not obs.enabled():
+        return _range_scan_jit(tree, qb, ql, max_items, engine)
+    with obs.span("op.scan"):
+        out_kid, out_val, emitted, rearranged = _range_scan_jit(
+            tree, qb, ql, max_items, engine)
+        em, re = jax.device_get((emitted, rearranged))
+        obs.counter("op.calls", op="scan").inc()
+        obs.counter("op.lanes", op="scan").inc(int(em.size))
+        obs.counter("op.emitted", op="scan").inc(int(em.sum()))
+        obs.counter("op.rearranged", op="scan").inc(int(re.sum()))
+    return out_kid, out_val, emitted, rearranged
 
 
 # --------------------------------------------------------------------------
@@ -844,7 +923,7 @@ def gather_live_sorted(tree: FBTree):
 
 
 @jax.jit
-def rebuild(tree: FBTree) -> Tuple[FBTree, BuildReport]:
+def _rebuild_jit(tree: FBTree) -> Tuple[FBTree, BuildReport]:
     """Compact a split-fragmented tree by re-running the device bulk build.
 
     Gathers the live (key id, value) pairs from the leaves
@@ -868,3 +947,19 @@ def rebuild(tree: FBTree) -> Tuple[FBTree, BuildReport]:
                       reclaimed=(a.key_count - n_live).astype(jnp.int32),
                       error=err)
     return FBTree(cfg, arrays), rep
+
+
+def rebuild(tree: FBTree) -> Tuple[FBTree, BuildReport]:
+    """Instrumented wrapper over the jitted rebuild barrier (same obs
+    contract as :func:`lookup_batch`; span ``span.op.rebuild``, counters
+    ``build.n_live``/``build.reclaimed`` labeled ``op=rebuild``)."""
+    if not obs.enabled():
+        return _rebuild_jit(tree)
+    with obs.span("op.rebuild"):
+        tree2, rep = _rebuild_jit(tree)
+        host = jax.device_get(rep)
+        obs.counter("op.calls", op="rebuild").inc()
+        obs.counter("build.n_live", op="rebuild").inc(int(host.n_live))
+        obs.counter("build.reclaimed",
+                    op="rebuild").inc(int(host.reclaimed))
+    return tree2, rep

@@ -33,6 +33,8 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
+
 __all__ = ["FaultInjected", "ShardDropped", "FaultSpec", "FaultPlan",
            "RetryPolicy", "CORRUPTIONS", "corrupt_tree"]
 
@@ -167,6 +169,8 @@ class FaultPlan:
         if (shard is not None and shard in self._dropped
                 and site.startswith("shard.dispatch")):
             self.events.append((site, "drop_shard", shard))
+            obs.event("fault", site=site, kind="drop_shard", seed=self.seed,
+                      shard=shard)
             raise ShardDropped(site, shard=shard)
         for si, spec in enumerate(self.specs):
             if spec.kind == "corrupt":
@@ -186,6 +190,8 @@ class FaultPlan:
     def _do(self, kind: str, site: str, shard: Optional[int],
             delay: float = 0.0, sticky: bool = False):
         self.events.append((site, kind, shard))
+        obs.event("fault", site=site, kind=kind, seed=self.seed,
+                  shard=shard)
         if kind == "abort":
             raise FaultInjected(site, "abort", shard)
         if kind == "drop_shard":
@@ -213,6 +219,8 @@ class FaultPlan:
             return obj, False
         obj2, kind = corrupt_tree(obj, self.rng)
         self.events.append((site, f"corrupt:{kind}", None))
+        obs.event("fault", site=site, kind=f"corrupt:{kind}",
+                  seed=self.seed)
         return obj2, True
 
 

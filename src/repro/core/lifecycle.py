@@ -27,9 +27,12 @@ Fault sites (``core.faults.FaultPlan.fire``): ``lifecycle.begin``,
 """
 from __future__ import annotations
 
+import time
 from typing import Any, Callable, List, NamedTuple, Optional, Tuple
 
 import jax.numpy as jnp
+
+from repro import obs
 
 from . import batch_ops as B
 from . import fsck
@@ -117,38 +120,48 @@ class TreeVersionManager:
         every failure path, because it is only reassigned on the last
         line.
         """
+        t0 = time.perf_counter()
+
         def fail(reason: str, violations=(), aux=None) -> PublishReport:
             self.history.append((self.version, label, False, reason))
+            obs.event("publish", label=label, version=self.version,
+                      ok=False, reason=reason,
+                      duration_s=time.perf_counter() - t0)
             return PublishReport(False, self.version, label, reason,
                                  tuple(violations), aux)
 
         aux = None
-        try:
-            self._fire("lifecycle.begin", label=label)
-            staged = build_fn()
-            if isinstance(staged, tuple):
-                staged, aux = staged[0], (staged[1] if len(staged) == 2
-                                          else staged[1:])
-            if aux is not None and bool(getattr(aux, "error", False)):
-                return fail("build-error", aux=aux)
-            if self.faults is not None:
-                staged, _ = self.faults.corrupt_staged("lifecycle.staged",
-                                                       staged)
-            if self.verify:
-                self._fire("lifecycle.fsck", label=label)
-                rep = fsck.check(staged)
-                if not rep.ok:
-                    return fail("fsck:" + rep.violations[0],
-                                violations=rep.violations, aux=aux)
-            self._fire("lifecycle.swap", label=label)
-        except FaultInjected as e:
-            return fail(f"fault:{e.site}", aux=aux)
-        except Exception as e:  # a real build bug must not kill serving
-            return fail(f"error:{type(e).__name__}: {e}", aux=aux)
-        self._previous = self._current
-        self._current = TreeVersion(staged, self.version + 1, label)
-        self.history.append((self.version, label, True, ""))
-        return PublishReport(True, self.version, label, "", (), aux)
+        with obs.span("lifecycle.publish", label=label):
+            try:
+                self._fire("lifecycle.begin", label=label)
+                staged = build_fn()
+                if isinstance(staged, tuple):
+                    staged, aux = staged[0], (staged[1] if len(staged) == 2
+                                              else staged[1:])
+                if aux is not None and bool(getattr(aux, "error", False)):
+                    return fail("build-error", aux=aux)
+                if self.faults is not None:
+                    staged, _ = self.faults.corrupt_staged(
+                        "lifecycle.staged", staged)
+                if self.verify:
+                    self._fire("lifecycle.fsck", label=label)
+                    rep = fsck.check(staged)
+                    if not rep.ok:
+                        obs.event("fsck", label=label,
+                                  violations=list(rep.violations))
+                        return fail("fsck:" + rep.violations[0],
+                                    violations=rep.violations, aux=aux)
+                self._fire("lifecycle.swap", label=label)
+            except FaultInjected as e:
+                return fail(f"fault:{e.site}", aux=aux)
+            except Exception as e:  # a real build bug must not kill serving
+                return fail(f"error:{type(e).__name__}: {e}", aux=aux)
+            self._previous = self._current
+            self._current = TreeVersion(staged, self.version + 1, label)
+            self.history.append((self.version, label, True, ""))
+            obs.event("publish", label=label, version=self.version, ok=True,
+                      reason="", duration_s=time.perf_counter() - t0)
+            return PublishReport(True, self.version, label, "", (), aux)
 
     # --------------------------------------------- barrier conveniences
     def rebuild(self, label: str = "rebuild") -> PublishReport:

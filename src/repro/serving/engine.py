@@ -12,12 +12,14 @@ device-resident pages (serve_step lowers independently in the dry-run).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.models import lm
 from repro.models.config import ModelConfig
 
@@ -50,6 +52,8 @@ class Request:
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     cached_blocks: int = 0
+    t0: float = 0.0       # arrival stamp (perf_counter) — request-latency
+    #                       histogram observes done-time minus this
 
 
 class Engine:
@@ -78,6 +82,8 @@ class Engine:
         self._prefill = jax.jit(
             lambda p, toks: lm.prefill(p, cfg, {"tokens": toks}, scfg.s_max))
         self.steps = 0
+        self._blocks_hit = 0     # prefix-cache blocks served from the store
+        self._blocks_seen = 0    # prompt blocks offered to the cache
 
     # ------------------------------------------------------------- plumbing
     def _store_blocks(self, cache_np, slot: int, page_ids: np.ndarray,
@@ -105,14 +111,29 @@ class Engine:
         waves = [r for r in reqs][: self.live.count(None)]
         if not waves:
             return
-        hit_blocks, pages = self.prefix.match([r.prompt for r in waves])
+        with obs.span("serve.admit", wave=len(waves)):
+            self._admit_wave(waves)
+
+    def _admit_wave(self, waves: List[Request]):
+        with obs.span("serve.cache_lookup"):
+            hit_blocks, pages = self.prefix.match([r.prompt for r in waves])
+        if obs.enabled():
+            bt = self.scfg.block_tokens
+            self._blocks_hit += int(sum(hit_blocks))
+            self._blocks_seen += int(sum(
+                r.prompt.shape[0] // bt for r in waves))
+            if self._blocks_seen:
+                obs.gauge("serve.hit_rate").set(
+                    self._blocks_hit / self._blocks_seen)
+            obs.counter("serve.admitted").inc(len(waves))
         for r, hb, pg in zip(waves, hit_blocks, pages):
             slot = self.live.index(None)
             r.cached_blocks = hb
             # prefill the whole prompt for the engine cache (single call),
             # but only *new* blocks are published to the page store
             toks = jnp.asarray(r.prompt, jnp.int32)[None]
-            logits, c = self._prefill(self.params, toks)
+            with obs.span("serve.prefill", rid=r.rid):
+                logits, c = self._prefill(self.params, toks)
             k = np.array(self.cache.k)
             v = np.array(self.cache.v)
             k[:, slot] = 0
@@ -139,9 +160,11 @@ class Engine:
         for i, r in enumerate(self.live):
             if r is not None:
                 toks[i] = r.out[-1]
-        logits, self.cache = self._decode(
-            self.params, jnp.asarray(toks), jnp.asarray(self.pos), self.cache)
-        nxt = np.asarray(jnp.argmax(logits, -1))
+        with obs.span("serve.decode"):
+            logits, self.cache = self._decode(
+                self.params, jnp.asarray(toks), jnp.asarray(self.pos),
+                self.cache)
+            nxt = np.asarray(jnp.argmax(logits, -1))
         for i, r in enumerate(self.live):
             if r is None:
                 continue
@@ -151,11 +174,17 @@ class Engine:
                     or self.pos[i] + 1 >= self.scfg.s_max):
                 r.done = True
                 self.live[i] = None
+                if obs.enabled():
+                    obs.counter("serve.completed").inc()
+                    if r.t0:
+                        obs.histogram("serve.request_latency_s").observe(
+                            time.perf_counter() - r.t0)
         self.steps += 1
 
     def run(self, requests: List[np.ndarray], max_steps: int = 10_000
             ) -> List[Request]:
-        queue = [Request(i, np.asarray(p, np.int32)) for i, p in
+        t0 = time.perf_counter()
+        queue = [Request(i, np.asarray(p, np.int32), t0=t0) for i, p in
                  enumerate(requests)]
         pending = list(queue)
         while (pending or any(self.live)) and self.steps < max_steps:

@@ -40,6 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import batch_ops as B
 from repro.core import keys as K
 from repro.core.faults import FaultPlan, RetryPolicy, ShardDropped
@@ -58,17 +59,29 @@ DEFAULT_RETRY = RetryPolicy()
 
 
 class ShardOpReport(NamedTuple):
-    """Cross-shard op outcome (host numpy — produced after the combine)."""
+    """Cross-shard op outcome (host numpy — produced after the combine).
+
+    A shard ends a routed op in exactly one of three states, and the
+    report keeps them apart (healthy skips must never read as
+    degradation — the telemetry counters and recovery heuristics key off
+    this): **hit** (owned lanes, served normally), **skipped** (owned no
+    lanes this batch — healthy, no launch attempted), or **dropped**
+    (owned lanes but was unreachable: its lanes appear in ``degraded``
+    for lookups or ``failed`` for mutations/scans).
+    """
     found: np.ndarray       # bool [B] — owner shard's found
     conflicts: np.ndarray   # int32 — in-batch dedupe losers (global, once)
     splits: np.ndarray      # int32 — leaf splits summed over shards
     error: np.ndarray       # bool — any shard hit a capacity error
     owner: np.ndarray       # int32 [B] — routed shard per query
-    shards_hit: int         # shards that owned at least one lane
+    shards_hit: int         # shards that owned lanes AND served normally
     failed: np.ndarray = np.zeros(0, bool)    # bool [B] — lane not served
     #                         (owner shard down; mutations: NOT committed)
     degraded: np.ndarray = np.zeros(0, bool)  # bool [B] — lane served from
     #                         the last-barrier snapshot (may be stale)
+    shards_skipped: int = 0  # healthy shards that owned no lanes
+    shards_dropped: Tuple[int, ...] = ()      # shard ids unreachable this
+    #                         op (their lanes are degraded/failed above)
 
 
 class RebalanceReport(NamedTuple):
@@ -112,21 +125,28 @@ def _dispatch(st: ShardedTree, s: int, opname: str, call,
     model reachability, not data errors.
     """
     if st.health is not None and not st.health.is_ok(s):
+        obs.counter("shard.skipped_down", op=opname).inc()
         return None
     pol = retry if retry is not None else DEFAULT_RETRY
     delays = list(pol.delays()) + [None]        # None = no sleep after last
-    for attempt, delay in enumerate(delays):
-        try:
-            if faults is not None:
-                faults.fire(f"shard.dispatch.{opname}", shard=s,
-                            attempt=attempt)
-            return call()
-        except ShardDropped:
-            if delay is not None:
-                pol.sleep(delay)
+    with obs.span("shard.dispatch", op=opname, shard=s):
+        for attempt, delay in enumerate(delays):
+            try:
+                if faults is not None:
+                    faults.fire(f"shard.dispatch.{opname}", shard=s,
+                                attempt=attempt)
+                return call()
+            except ShardDropped:
+                obs.counter("shard.retries", op=opname).inc()
+                obs.event("shard.retry", op=opname, shard=s,
+                          attempt=attempt)
+                if delay is not None:
+                    pol.sleep(delay)
     if st.health is not None:
         st.health.mark_down(
             s, f"{opname}: unreachable after {len(delays)} attempts")
+    obs.counter("shard.down", op=opname).inc()
+    obs.event("shard.down", op=opname, shard=s, attempts=len(delays))
     return None
 
 
@@ -150,9 +170,13 @@ def lookup_batch(st: ShardedTree, qb, ql,
     found = np.zeros((Bn,), dtype=bool)
     degraded = np.zeros((Bn,), dtype=bool)
     pending = []
+    hit = 0
+    skipped = 0
+    dropped = []
     for s, t in enumerate(st.shards):
         sel = owner == s
         if not sel.any():
+            skipped += 1                        # healthy skip, not a drop
             continue
         dev = st.devices[s]
         res = _dispatch(
@@ -166,23 +190,32 @@ def lookup_batch(st: ShardedTree, qb, ql,
             snap = st.snapshots[s]
             v, rep = B.lookup_batch(snap, qb, ql, engine=engine)
             degraded |= sel
+            dropped.append(s)
+            obs.counter("shard.degraded_lanes", op="lookup").inc(
+                int(sel.sum()))
+            obs.event("shard.degraded", op="lookup", shard=s,
+                      lanes=int(sel.sum()))
         else:
             v, rep = res
+            hit += 1
         pending.append((sel, v, rep.found))     # async: combine later
     for sel, v, f in pending:
         vals[sel] = np.asarray(v)[sel]
         found[sel] = np.asarray(f)[sel]
     rep = ShardOpReport(found=found, conflicts=np.int32(0),
                         splits=np.int32(0), error=np.bool_(False),
-                        owner=owner, shards_hit=len(pending),
-                        failed=np.zeros((Bn,), bool), degraded=degraded)
+                        owner=owner, shards_hit=hit,
+                        failed=np.zeros((Bn,), bool), degraded=degraded,
+                        shards_skipped=skipped,
+                        shards_dropped=tuple(dropped))
     return vals, rep
 
 
 def _routed_mutation(st: ShardedTree, owner, opname, run_one, faults,
                      retry):
     """Shared mutation loop: run ``run_one(shard_tree, mask, dev)`` on every
-    reachable shard owning lanes; returns (new shards, outcomes, failed).
+    reachable shard owning lanes; returns (new shards, outcomes, failed,
+    skipped, dropped).
 
     Lanes of an unreachable shard are reported ``failed`` — the shard tree
     is left untouched (the mutation is NOT committed there), so a caller
@@ -191,9 +224,12 @@ def _routed_mutation(st: ShardedTree, owner, opname, run_one, faults,
     shards = list(st.shards)
     outcomes = []
     failed = np.zeros(owner.shape, dtype=bool)
+    skipped = 0
+    dropped = []
     for s, t in enumerate(st.shards):
         sel = owner == s
         if not sel.any():
+            skipped += 1                        # healthy skip, not a drop
             continue
         dev = st.devices[s]
 
@@ -203,11 +239,15 @@ def _routed_mutation(st: ShardedTree, owner, opname, run_one, faults,
         res = _dispatch(st, s, opname, call, faults, retry)
         if res is None:
             failed |= sel
+            dropped.append(s)
+            obs.counter("shard.failed_lanes", op=opname).inc(int(sel.sum()))
+            obs.event("shard.failed", op=opname, shard=s,
+                      lanes=int(sel.sum()))
             continue
         t2, out = res
         shards[s] = t2
         outcomes.append((sel, out))
-    return tuple(shards), outcomes, failed
+    return tuple(shards), outcomes, failed, skipped, tuple(dropped)
 
 
 def update_batch(st: ShardedTree, qb, ql, vals,
@@ -222,9 +262,10 @@ def update_batch(st: ShardedTree, qb, ql, vals,
         t2, rep = B.update_batch(t, _put(qb, dev), _put(ql, dev),
                                  _put(vals, dev), engine=engine, mask=mask)
         return t2, rep
-    shards, outcomes, failed = _routed_mutation(st, owner, "update",
-                                                run_one, faults, retry)
-    return st.replace(shards=shards), _combine(outcomes, owner, failed)
+    shards, outcomes, failed, skipped, dropped = _routed_mutation(
+        st, owner, "update", run_one, faults, retry)
+    return (st.replace(shards=shards),
+            _combine(outcomes, owner, failed, skipped, dropped))
 
 
 def remove_batch(st: ShardedTree, qb, ql,
@@ -238,9 +279,10 @@ def remove_batch(st: ShardedTree, qb, ql,
         t2, rep = B.remove_batch(t, _put(qb, dev), _put(ql, dev),
                                  engine=engine, mask=mask)
         return t2, rep
-    shards, outcomes, failed = _routed_mutation(st, owner, "remove",
-                                                run_one, faults, retry)
-    return st.replace(shards=shards), _combine(outcomes, owner, failed)
+    shards, outcomes, failed, skipped, dropped = _routed_mutation(
+        st, owner, "remove", run_one, faults, retry)
+    return (st.replace(shards=shards),
+            _combine(outcomes, owner, failed, skipped, dropped))
 
 
 def insert_batch(st: ShardedTree, qb, ql, vals,
@@ -263,13 +305,15 @@ def insert_batch(st: ShardedTree, qb, ql, vals,
                                          mask=mask, **kw)
         rounds_max = max(rounds_max, rounds)
         return t2, rep
-    shards, outcomes, failed = _routed_mutation(st, owner, "insert",
-                                                run_one, faults, retry)
-    return (st.replace(shards=shards), _combine(outcomes, owner, failed),
+    shards, outcomes, failed, skipped, dropped = _routed_mutation(
+        st, owner, "insert", run_one, faults, retry)
+    return (st.replace(shards=shards),
+            _combine(outcomes, owner, failed, skipped, dropped),
             rounds_max)
 
 
-def _combine(outcomes, owner, failed=None) -> ShardOpReport:
+def _combine(outcomes, owner, failed=None, skipped=0,
+             dropped=()) -> ShardOpReport:
     found = np.zeros(owner.shape, dtype=bool)
     splits = 0
     error = False
@@ -288,7 +332,9 @@ def _combine(outcomes, owner, failed=None) -> ShardOpReport:
                          splits=np.int32(splits), error=np.bool_(error),
                          owner=owner, shards_hit=len(outcomes),
                          failed=failed,
-                         degraded=np.zeros(owner.shape, dtype=bool))
+                         degraded=np.zeros(owner.shape, dtype=bool),
+                         shards_skipped=skipped,
+                         shards_dropped=tuple(dropped))
 
 
 # --------------------------------------------------------------------------
@@ -364,6 +410,10 @@ def range_scan(st: ShardedTree, qb, ql, max_items: int = 64,
             faults, retry)
         if res is None:
             failed |= active      # partial prefix, flagged — never silent
+            obs.counter("shard.failed_lanes", op="range_scan").inc(
+                int(active.sum()))
+            obs.event("shard.failed", op="range_scan", shard=s,
+                      lanes=int(active.sum()))
             continue
         kid_s, val_s, em_s, re_s = res
         kid_s = np.asarray(kid_s)
@@ -414,26 +464,29 @@ def rebalance(st: ShardedTree, device: bool = True,
     leaves the old partition serving.
     """
     counts_before = tuple(int(t.n_keys_live) for t in st.shards)
-    kbs, kls, vvs = [], [], []
-    reclaimed = 0
-    for s, t in enumerate(st.shards):
+    with obs.span("shard.rebalance", n_shards=st.n_shards):
+        kbs, kls, vvs = [], [], []
+        reclaimed = 0
+        for s, t in enumerate(st.shards):
+            if faults is not None:
+                faults.fire("lifecycle.rebalance.gather", shard=s)
+            kb, kl, _, vv, n_live = B.gather_live_sorted(t)
+            n = int(n_live)
+            reclaimed += int(t.arrays.key_count) - n
+            kbs.append(np.asarray(kb)[:n])
+            kls.append(np.asarray(kl)[:n])
+            vvs.append(np.asarray(vv)[:n])
+        ks = K.KeySet(np.concatenate(kbs, axis=0),
+                      np.concatenate(kls, axis=0))
+        vals = np.concatenate(vvs, axis=0)
         if faults is not None:
-            faults.fire("lifecycle.rebalance.gather", shard=s)
-        kb, kl, _, vv, n_live = B.gather_live_sorted(t)
-        n = int(n_live)
-        reclaimed += int(t.arrays.key_count) - n
-        kbs.append(np.asarray(kb)[:n])
-        kls.append(np.asarray(kl)[:n])
-        vvs.append(np.asarray(vv)[:n])
-    ks = K.KeySet(np.concatenate(kbs, axis=0), np.concatenate(kls, axis=0))
-    vals = np.concatenate(vvs, axis=0)
-    if faults is not None:
-        faults.fire("lifecycle.rebalance.build")
-    # the concatenation is already globally sorted (invariant above) —
-    # presorted skips re-running step 1's lexsort at every barrier
-    st2 = sharded_build(ks, vals, st.n_shards, cfg=st.config, device=device,
-                        mesh=st.mesh, presorted=True)
+            faults.fire("lifecycle.rebalance.build")
+        # the concatenation is already globally sorted (invariant above) —
+        # presorted skips re-running step 1's lexsort at every barrier
+        st2 = sharded_build(ks, vals, st.n_shards, cfg=st.config,
+                            device=device, mesh=st.mesh, presorted=True)
     rep = RebalanceReport(
         n_live=ks.n, reclaimed=reclaimed, counts_before=counts_before,
         counts_after=tuple(int(t.n_keys_live) for t in st2.shards))
+    obs.event("rebalance", n_live=rep.n_live, reclaimed=rep.reclaimed)
     return st2, rep

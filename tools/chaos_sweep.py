@@ -34,6 +34,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
 
 import numpy as np
 
+from repro import obs
 from repro.core import batch_ops as B
 from repro.core import fsck
 from repro.core import keys as K
@@ -324,6 +325,9 @@ def main(argv=None) -> int:
     ap.add_argument("--shards", default="1,4",
                     help="comma-separated shard counts")
     ap.add_argument("--scenarios", default=",".join(SCENARIOS))
+    ap.add_argument("--events-dir", default="out/chaos",
+                    help="where failing schedules dump their telemetry "
+                         "event logs (JSON lines, one file per failure)")
     args = ap.parse_args(argv)
     shard_list = [int(s) for s in args.shards.split(",")]
     scen = [s for s in args.scenarios.split(",") if s]
@@ -331,18 +335,29 @@ def main(argv=None) -> int:
         if s not in SCENARIOS:
             ap.error(f"unknown scenario {s!r}; one of {SCENARIOS}")
 
+    # telemetry on for the whole sweep: each schedule's event log is the
+    # replay context a failure ships as its CI artifact
+    obs.enable()
     t0 = time.time()
     events = 0
     fails = []
     for i in range(args.schedules):
         sc = scen[i % len(scen)]
         nsh = shard_list[(i // len(scen)) % len(shard_list)]
+        obs.reset()                     # one event log per schedule
         try:
             r = run_schedule(i, nsh, sc)
             events += r["events"]
         except Exception as e:  # noqa: BLE001 — report, keep sweeping
             fails.append((i, nsh, sc, repr(e)))
-            print(f"FAIL seed={i} shards={nsh} scenario={sc}: {e!r}")
+            dump = os.path.join(args.events_dir,
+                                f"fail_seed{i}_shards{nsh}_{sc}.events.jsonl")
+            n_ev = obs.export_events_jsonl(dump)
+            summary = ", ".join(f"{k}={v}" for k, v in
+                                obs.event_summary().items()) or "none"
+            print(f"FAIL seed={i} shards={nsh} scenario={sc}: {e!r}\n"
+                  f"     events: {summary}\n"
+                  f"     log: {dump} ({n_ev} events)")
     dt = time.time() - t0
     print(f"chaos sweep: {args.schedules} schedules, {events} faults fired, "
           f"{len(fails)} failures, {dt:.1f}s")

@@ -18,13 +18,17 @@ import sys
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SCAN_DIRS = ("src", "benchmarks", "tests", "tools", "examples")
 CITE_RE = re.compile(r"DESIGN\.md\s+§(\d+)")
-ANCHOR_RE = re.compile(r"^##\s+§(\d+)\b", re.MULTILINE)
+ANCHOR_RE = re.compile(r"^##\s+§(\d+)\s+(.*)$", re.MULTILINE)
 TIER1 = "python -m pytest -x -q"
+# sections that must exist under these exact titles: subsystems whose
+# docs are part of their acceptance criteria
+REQUIRED_SECTIONS = {9: "Observability"}
 
 
-def design_sections(design_path: str) -> set:
+def design_sections(design_path: str) -> dict:
+    """``{section number: title}`` for every ``## §N Title`` anchor."""
     with open(design_path, encoding="utf-8") as f:
-        return {int(m) for m in ANCHOR_RE.findall(f.read())}
+        return {int(n): t.strip() for n, t in ANCHOR_RE.findall(f.read())}
 
 
 def cited_sections(root: str):
@@ -53,6 +57,14 @@ def main() -> int:
         sections = design_sections(design)
         if not sections:
             errors.append("DESIGN.md has no '## §N' section anchors")
+        for num, title in REQUIRED_SECTIONS.items():
+            got = sections.get(num)
+            if got is None:
+                errors.append(f"DESIGN.md is missing required section "
+                              f"§{num} {title!r}")
+            elif title.lower() not in got.lower():
+                errors.append(f"DESIGN.md §{num} is titled {got!r}, "
+                              f"expected it to cover {title!r}")
         n_cites = 0
         for rel, lineno, sec in cited_sections(ROOT):
             n_cites += 1

@@ -1,0 +1,170 @@
+#!/usr/bin/env python
+"""Validate telemetry JSON-lines exports against the event schema
+(DESIGN.md §9) — and, with ``--run-serving-smoke``, produce one to
+validate by driving the sharded serving example with telemetry on.
+
+Validation mode (the CI gate for any ``*.events.jsonl`` artifact, e.g. a
+failing chaos schedule's dump):
+
+  PYTHONPATH=src python tools/check_obs_export.py out/chaos/*.events.jsonl
+
+Every line must parse as JSON and pass ``repro.obs.validate_event`` — the
+validator imports the same ``EVENT_TYPES`` table the emitter enforces, so
+an export that validates here is exactly one the emitter could have
+produced; unknown or malformed event types fail the check.
+
+Serving smoke (the CI telemetry step):
+
+  JAX_PLATFORMS=cpu PYTHONPATH=src python tools/check_obs_export.py \
+      --run-serving-smoke --out out/obs
+
+Runs a tiny sharded serving engine (2-shard prefix-cache tree) under an
+injected dispatch fault with telemetry enabled, then asserts the full
+pipeline end to end: non-empty request-latency histogram (p50/p99),
+shard retry + degraded counters from the fault, at least one successful
+``publish`` event from a ``compact`` barrier, and a schema-clean
+JSON-lines export.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+
+from repro import obs
+
+
+def validate_file(path: str) -> int:
+    """Schema-check one JSON-lines export; returns the number of
+    violations (each printed with its line number)."""
+    bad = 0
+    n = 0
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            n += 1
+            try:
+                e = json.loads(line)
+            except json.JSONDecodeError as exc:
+                print(f"{path}:{lineno}: malformed JSON: {exc}")
+                bad += 1
+                continue
+            for v in obs.validate_event(e):
+                print(f"{path}:{lineno}: {v}")
+                bad += 1
+    status = "OK" if not bad else f"{bad} violations"
+    print(f"{path}: {n} events, {status}")
+    return bad
+
+
+def run_serving_smoke(out_dir: str) -> int:
+    """Drive the sharded serving engine with telemetry on; returns 0 when
+    every acceptance assertion and the export schema check pass."""
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core.faults import FaultPlan, FaultSpec, RetryPolicy
+    from repro.models import lm
+    from repro.serving.engine import Engine, ServeConfig
+
+    obs.enable()
+    obs.reset()
+
+    # two dispatch faults on the prefix-cache tree: a transient drop the
+    # retry loop absorbs (shard 1), and a window long enough to exhaust
+    # all three retry attempts (shard 0) so one lookup degrades to the
+    # barrier snapshot
+    plan = FaultPlan((
+        FaultSpec("shard.dispatch.lookup", "drop_shard", shard=1,
+                  nth=0, count=1),
+        FaultSpec("shard.dispatch.lookup", "drop_shard", shard=0,
+                  nth=1, count=3),
+    ), sleep=lambda s: None)
+    cfg = get_config("yi-9b", smoke=True)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    scfg = ServeConfig(max_batch=2, s_max=96, block_tokens=8, n_pages=128,
+                       max_new_tokens=4, tree_shards=2, faults=plan)
+    eng = Engine(cfg, params, scfg)
+    eng.prefix.retry = RetryPolicy(max_attempts=3, sleep=lambda s: None)
+
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, cfg.vocab, size=32).astype(np.int32)
+    reqs = [np.concatenate([shared, rng.integers(0, cfg.vocab, 8)])
+            .astype(np.int32) for _ in range(6)]
+    done = eng.run(reqs)
+    plan.disarm()
+    rep = eng.prefix.compact()           # publish barrier, label="compact"
+
+    print(obs.console_summary())
+    path = os.path.join(out_dir, "serving_smoke.events.jsonl")
+    n_ev = obs.export_events_jsonl(path)
+    prom = os.path.join(out_dir, "serving_smoke.prom")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(prom, "w") as f:
+        f.write(obs.prometheus_text())
+
+    failures = []
+
+    def check(ok: bool, what: str):
+        print(("PASS" if ok else "FAIL"), what)
+        if not ok:
+            failures.append(what)
+
+    check(all(r.done for r in done), "all requests completed")
+    h = obs.get_metric("serve.request_latency_s")
+    check(h is not None and h.count >= len(reqs),
+          "request-latency histogram is populated")
+    if h is not None and h.count:
+        check(h.p50 > 0 and h.p99 >= h.p50,
+              f"latency quantiles sane (p50={h.p50:.4g}s p99={h.p99:.4g}s)")
+    retries = obs.get_metric("shard.retries", op="lookup")
+    check(retries is not None and retries.value > 0,
+          "shard retry counter fired under injected fault")
+    degraded = obs.get_metric("shard.degraded_lanes", op="lookup")
+    check(degraded is not None and degraded.value > 0,
+          "degraded-lane counter fired under injected fault")
+    check(rep.ok, f"compact publish succeeded (reason={rep.reason!r})")
+    pubs = [e for e in obs.events()
+            if e["type"] == "publish" and e["ok"]
+            and e["label"] == "compact"]
+    check(len(pubs) >= 1, "publish event recorded from the compact barrier")
+    check(n_ev > 0, f"event export is non-empty ({n_ev} events)")
+    check(validate_file(path) == 0, "export passes the schema check")
+
+    if failures:
+        print(f"serving smoke: {len(failures)} check(s) failed")
+        return 1
+    print(f"serving smoke: all checks passed; artifacts in {out_dir}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("files", nargs="*",
+                    help="JSON-lines event exports to validate")
+    ap.add_argument("--run-serving-smoke", action="store_true",
+                    help="drive the sharded serving example with telemetry "
+                         "enabled and validate its export end to end")
+    ap.add_argument("--out", default="out/obs",
+                    help="artifact directory for --run-serving-smoke")
+    args = ap.parse_args(argv)
+    if not args.files and not args.run_serving_smoke:
+        ap.error("nothing to do: pass export files and/or "
+                 "--run-serving-smoke")
+    rc = 0
+    if args.run_serving_smoke:
+        rc |= run_serving_smoke(args.out)
+    bad = 0
+    for path in args.files:
+        bad += validate_file(path)
+    return 1 if (rc or bad) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
